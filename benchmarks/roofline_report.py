@@ -1,0 +1,79 @@
+"""Roofline report: renders the dry-run JSONL sweeps into the per-(arch x
+mesh) table used by EXPERIMENTS.md §Roofline, with bottleneck and one-line
+recommendation per pair."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                rows.append(json.loads(line))
+    return rows
+
+
+def recommendation(r: Dict) -> str:
+    b = r["bottleneck"]
+    if b == "collective":
+        kinds = r.get("collective_breakdown", {})
+        top = max(kinds, key=kinds.get) if kinds else "all-reduce"
+        return (
+            f"dominant {top}: reshard to avoid cross-'data' contractions "
+            f"(fsdp off / activation-stationary layout) or overlap with compute"
+        )
+    if b == "memory":
+        return "decode is HBM-bound: shrink cache dtype (int8 KV) or batch more"
+    return "compute-bound: good — push MXU utilization (block shapes, bf16)"
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = (
+        f"{'arch':26s} {'shape':12s} {'mesh':9s} {'compute_s':>10s} "
+        f"{'memory_s':>10s} {'collect_s':>10s} {'bound':>10s} {'MF/HLO':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("error"):
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} ERROR")
+            continue
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+            f"{r['collective_s']:10.3e} {r['bottleneck']:>10s} "
+            f"{r['useful_flops_frac']:7.3f}"
+        )
+    return "\n".join(lines)
+
+
+def run() -> Dict:
+    single = load(os.path.join(RESULTS_DIR, "dryrun_single_pod.jsonl"))
+    multi = load(os.path.join(RESULTS_DIR, "dryrun_multi_pod.jsonl"))
+    print("== single-pod (16x16 = 256 chips) ==")
+    print(table(single))
+    if multi:
+        print("\n== multi-pod (2x16x16 = 512 chips) ==")
+        print(table(multi))
+    ok_s = [r for r in single if not r.get("error")]
+    ok_m = [r for r in multi if not r.get("error")]
+    return {
+        "single_pod_pairs": len(ok_s),
+        "single_pod_errors": len(single) - len(ok_s),
+        "multi_pod_pairs": len(ok_m),
+        "multi_pod_errors": len(multi) - len(ok_m),
+        "bottlenecks": {
+            b: sum(1 for r in ok_s if r["bottleneck"] == b)
+            for b in ("compute", "memory", "collective")
+        },
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,21 @@
+"""Demo: lower + compile one (architecture x shape) pair on the production
+mesh with placeholder devices, and print its roofline terms.  This is a thin
+wrapper over launch/dryrun.py — run that module directly for the full sweep.
+
+    PYTHONPATH=src python examples/multipod_dryrun_demo.py \
+        [--arch gemma3-12b] [--shape decode_32k] [--multi-pod]
+"""
+
+# The dry-run needs 512 placeholder devices BEFORE any jax import — dryrun.py
+# sets this itself as its first two lines; we just exec it with args.
+import runpy
+import sys
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv += ["--arch", "gemma3-12b"]
+    if not any(a.startswith("--shape") for a in argv):
+        argv += ["--shape", "decode_32k"]
+    sys.argv = ["repro.launch.dryrun"] + argv
+    runpy.run_module("repro.launch.dryrun", run_name="__main__")

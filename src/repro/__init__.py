@@ -1,0 +1,9 @@
+"""COMtune reproduction: packet-loss-resilient distributed inference as a
+first-class feature of a multi-pod JAX training/serving framework.
+
+Paper: Itahara, Nishio, Koda, Yamamoto — "Communication-oriented Model
+Fine-tuning for Packet-loss Resilient Distributed Inference under Highly
+Lossy IoT Networks" (arXiv:2112.09407, 2021).
+"""
+
+__version__ = "1.0.0"

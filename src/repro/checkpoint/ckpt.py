@@ -1,0 +1,87 @@
+"""Pytree checkpointing to .npz (flattened key-paths), with step management.
+
+Host-gathered (fine at the scales this container trains); the save path is
+sharding-transparent because ``np.asarray`` fetches the addressable shards.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return f"[{k.idx}]"
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    return str(k)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, name: str = "ckpt") -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"{name}_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # np.savez appends .npz if missing
+    flat = _flatten(tree)
+    # bf16 isn't supported by np.savez: view as uint16 with a marker.
+    packed = {}
+    for k, v in flat.items():
+        if v.dtype == jax.numpy.bfloat16:
+            packed["BF16__" + k] = v.view(np.uint16)
+        else:
+            packed[k] = v
+    np.savez(tmp, **packed)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
+                       name: str = "ckpt") -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if step is None:
+        step = latest_step(ckpt_dir, name)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    loaded = {}
+    for k in data.files:
+        if k.startswith("BF16__"):
+            loaded[k[len("BF16__"):]] = data[k].view(jax.numpy.bfloat16)
+        else:
+            loaded[k] = data[k]
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = _SEP.join(_key_str(k) for k in path_keys)
+        if key not in loaded:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = loaded[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(arr)
+    return treedef.unflatten(leaves), step
+
+
+def latest_step(ckpt_dir: str, name: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    pat = re.compile(rf"{re.escape(name)}_(\d+)\.npz$")
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir) if (m := pat.match(f))]
+    return max(steps) if steps else None

@@ -1,0 +1,44 @@
+"""Architecture registry: the 10 assigned configs + the paper's CNN."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import INPUT_SHAPES, LayerSpec, LinkConfig, ModelConfig, ShapeConfig
+
+from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+from repro.configs.qwen1_5_0_5b import CONFIG as _qwen05
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.qwen2_vl_72b import CONFIG as _qwen2vl
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.codeqwen1_5_7b import CONFIG as _codeqwen
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+from repro.configs.gemma_7b import CONFIG as _gemma7b
+from repro.configs.xlstm_350m import CONFIG as _xlstm
+
+ARCHITECTURES: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _jamba,
+        _qwen05,
+        _kimi,
+        _arctic,
+        _qwen2vl,
+        _gemma3,
+        _codeqwen,
+        _musicgen,
+        _gemma7b,
+        _xlstm,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHITECTURES)}")
+    return ARCHITECTURES[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,14 @@
+"""COMtune core: lossy-link model, compression, and the split-model
+fine-tuning/serving compositions (the paper's contribution)."""
+
+from repro.core.comtune import (  # noqa: F401
+    LinkSpec,
+    channel_link,
+    comtune_forward,
+    di_latency_s,
+    distributed_inference,
+    dropout_link,
+    message_bytes,
+)
+from repro.core.compression import Compressor, PCASpec, QuantSpec  # noqa: F401
+from repro.core.link import ChannelConfig, apply_channel  # noqa: F401

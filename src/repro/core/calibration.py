@@ -1,0 +1,111 @@
+"""Calibration of compression parameters (paper Appendix A).
+
+* Quantization scale factors ``s_min``/``s_max`` are determined *per element*
+  "based on the range of the distribution of the element using the
+  pre-obtained dataset" — we use per-feature min/max (optionally percentile
+  clipped) over a calibration batch of split-point activations.
+* PCA basis ``w`` (top-D' eigenvectors of the activation covariance, Eq. 20-22)
+  and bias ``b`` (Eq. 23).  Eigenvectors are computed with NumPy's symmetric
+  eigendecomposition on the (D, D) covariance — D is a feature dim (e.g.
+  16384 for the paper's CNN, d_model for LMs), fine on host.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressor, PCASpec, QuantSpec
+
+
+def collect_activations(apply_fn, params, batches) -> np.ndarray:
+    """Run the device-side sub-model over calibration batches and stack the
+    flattened split-point activations into (N, D)."""
+    outs = []
+    for batch in batches:
+        a = apply_fn(params, batch)
+        a = np.asarray(a)
+        outs.append(a.reshape(-1, a.shape[-1]))
+    return np.concatenate(outs, axis=0)
+
+
+def calibrate_quant(
+    activations: np.ndarray,
+    bits: int,
+    percentile: float = 0.0,
+) -> QuantSpec:
+    """Per-feature scale factors. ``percentile`` > 0 trims outliers
+    symmetrically (e.g. 0.1 -> use the 0.1/99.9 percentiles)."""
+    if percentile > 0.0:
+        s_min = np.percentile(activations, percentile, axis=0)
+        s_max = np.percentile(activations, 100.0 - percentile, axis=0)
+    else:
+        s_min = activations.min(axis=0)
+        s_max = activations.max(axis=0)
+    # Guard degenerate features.
+    flat = s_max - s_min < 1e-6
+    s_max = np.where(flat, s_min + 1e-6, s_max)
+    return QuantSpec(
+        bits=bits,
+        s_min=jnp.asarray(s_min, jnp.float32),
+        s_max=jnp.asarray(s_max, jnp.float32),
+    )
+
+
+def calibrate_pca(activations: np.ndarray, reduced_dim: int) -> PCASpec:
+    """Eq. (20)-(23). activations: (N, D)."""
+    a = np.asarray(activations, dtype=np.float64)
+    mean = a.mean(axis=0)
+    centered = a - mean
+    # Covariance S (Eq. 20); use the N x N trick when N < D.
+    n, d = centered.shape
+    if n >= d:
+        cov = centered.T @ centered / n
+        eigval, eigvec = np.linalg.eigh(cov)  # ascending
+        order = np.argsort(eigval)[::-1]
+        basis = eigvec[:, order].T  # rows = eigenvectors, descending eigval
+    else:
+        gram = centered @ centered.T / n
+        eigval, eigvec = np.linalg.eigh(gram)
+        order = np.argsort(eigval)[::-1]
+        eigval = np.maximum(eigval[order], 1e-12)
+        # v_i = X^T u_i / sqrt(n * lambda_i)
+        basis = (centered.T @ eigvec[:, order] / np.sqrt(n * eigval)).T
+    w = basis[:reduced_dim]  # (D', D)
+    # Bias b: projection of the mean onto the DISCARDED eigenvectors (Eq. 23).
+    # Equivalent: b = mean - w^T w mean.
+    b = mean - w.T @ (w @ mean)
+    return PCASpec(w=jnp.asarray(w, jnp.float32), b=jnp.asarray(b, jnp.float32))
+
+
+def make_compressor(
+    activations: np.ndarray,
+    *,
+    kind: str,
+    message_bytes: float | None = None,
+    bits: int | None = None,
+    reduced_dim: int | None = None,
+    percentile: float = 0.0,
+) -> Compressor:
+    """Build a Compressor sized for a target message size M (paper's knob)
+    or from explicit bits / reduced_dim."""
+    d = activations.shape[-1]
+    float_bytes = 4.0
+    if kind == "identity":
+        return Compressor(kind="identity")
+    if kind == "quant":
+        if bits is None:
+            assert message_bytes is not None
+            bits = QuantSpec.bits_for_message_size(message_bytes, d * float_bytes)
+        return Compressor(kind="quant", quant=calibrate_quant(activations, bits, percentile))
+    if kind == "pca":
+        if reduced_dim is None:
+            assert message_bytes is not None
+            reduced_dim = PCASpec.reduced_dim_for_message_size(
+                message_bytes, float_bytes, d
+            )
+        return Compressor(kind="pca", pca=calibrate_pca(activations, reduced_dim))
+    raise ValueError(kind)

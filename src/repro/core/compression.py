@@ -1,0 +1,173 @@
+"""Lossy activation compression (paper Appendix A).
+
+Two schemes, exactly as the paper defines them:
+
+* **Quantization** (Eq. 13-17): per-element clip to calibrated
+  ``[s_min, s_max]`` then uniform ``n``-bit integer quantization, where
+  ``n = floor(32 * M / M_float)`` for a target message size ``M``.
+* **Dimensional reduction** (Eq. 18-23): PCA — transmit ``D'`` principal
+  coefficients, ``D' = floor(M * D / M_float)``; decompress with the
+  transposed basis plus the residual-mean bias ``b`` (Eq. 23).
+
+Both are exposed as ``Compressor`` objects with differentiable
+``compress``/``decompress`` (quantization uses a straight-through estimator
+so COMtune can fine-tune through it, matching the paper's "insert the
+compression function into the division layer and train" procedure).
+
+The channel acts on the *compressed* representation: for quantization each
+transmitted element corresponds to one activation element; for PCA each
+transmitted element is one principal coefficient (this asymmetry is what
+makes PCA fragile under loss — the paper's Fig. 7b finding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Quantization (Eq. 13-15)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Per-element scale factors; shapes broadcast against the activation's
+    trailing feature dims (the paper calibrates per element of the
+    activation vector)."""
+
+    bits: int
+    s_min: jax.Array
+    s_max: jax.Array
+
+    @staticmethod
+    def bits_for_message_size(message_bytes: float, float_bytes: float) -> int:
+        """n = floor(32 M / M_float), clamped to [1, 32]."""
+        return int(max(1, min(32, np.floor(32.0 * message_bytes / float_bytes))))
+
+
+def quantize(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Eq. (13)-(14): clip then round to n-bit integer grid. Returns the
+    integer code as float (the code is what crosses the channel)."""
+    levels = float(2**spec.bits - 1)
+    s_min = spec.s_min.astype(x.dtype)
+    s_max = spec.s_max.astype(x.dtype)
+    rng = jnp.maximum(s_max - s_min, jnp.asarray(1e-8, x.dtype))
+    clipped = jnp.clip(x, s_min, s_max)
+    code = jnp.round((clipped - s_min) / rng * levels)
+    return code
+
+
+def dequantize(code: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Eq. (15)."""
+    levels = float(2**spec.bits - 1)
+    s_min = spec.s_min.astype(code.dtype)
+    s_max = spec.s_max.astype(code.dtype)
+    rng = jnp.maximum(s_max - s_min, jnp.asarray(1e-8, code.dtype))
+    return code / levels * rng + s_min
+
+
+def fake_quantize_ste(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Quantize+dequantize with a straight-through gradient, used inside the
+    COMtune fine-tuning graph (the channel mask is applied between the two in
+    serving; in training dropout stands in for the channel)."""
+    y = dequantize(quantize(x, spec), spec)
+    # Straight-through: forward y, backward identity (within the clip range).
+    s_min = spec.s_min.astype(x.dtype)
+    s_max = spec.s_max.astype(x.dtype)
+    in_range = jnp.logical_and(x >= s_min, x <= s_max).astype(x.dtype)
+    return x + jax.lax.stop_gradient(y - x) * 1.0 + 0.0 * in_range
+
+
+# ---------------------------------------------------------------------------
+# PCA dimensional reduction (Eq. 18-23)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PCASpec:
+    """w: (D', D) top eigenvector rows; b: (D,) residual mean bias (Eq. 23)."""
+
+    w: jax.Array
+    b: jax.Array
+
+    @property
+    def reduced_dim(self) -> int:
+        return int(self.w.shape[0])
+
+    @staticmethod
+    def reduced_dim_for_message_size(
+        message_bytes: float, float_bytes: float, full_dim: int
+    ) -> int:
+        """Eq. D' = floor(M D / M_float) with M_float = D * float_bytes,
+        i.e. D' = floor(M / float_bytes) coefficients, clamped to [1, D]."""
+        return int(max(1, min(full_dim, int(np.floor(message_bytes / float_bytes)))))
+
+
+def pca_compress(x: jax.Array, spec: PCASpec) -> jax.Array:
+    """Eq. (18): a' = w a   (x: (..., D) -> (..., D'))."""
+    return jnp.einsum("...d,kd->...k", x, spec.w.astype(x.dtype))
+
+
+def pca_decompress(coeff: jax.Array, spec: PCASpec) -> jax.Array:
+    """Eq. (19): a = w^T a' + b."""
+    return (
+        jnp.einsum("...k,kd->...d", coeff, spec.w.astype(coeff.dtype))
+        + spec.b.astype(coeff.dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Unified compressor interface used by core.comtune
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """f_cmp / f_dec pair (paper Eq. 8).  kind in {identity, quant, pca}."""
+
+    kind: str = "identity"
+    quant: Optional[QuantSpec] = None
+    pca: Optional[PCASpec] = None
+
+    def compress(self, x: jax.Array) -> jax.Array:
+        if self.kind == "identity":
+            return x
+        if self.kind == "quant":
+            return quantize(x, self.quant)
+        if self.kind == "pca":
+            return pca_compress(x, self.pca)
+        raise ValueError(self.kind)
+
+    def decompress(self, z: jax.Array) -> jax.Array:
+        if self.kind == "identity":
+            return z
+        if self.kind == "quant":
+            return dequantize(z, self.quant)
+        if self.kind == "pca":
+            return pca_decompress(z, self.pca)
+        raise ValueError(self.kind)
+
+    def roundtrip_train(self, x: jax.Array) -> jax.Array:
+        """Differentiable compress∘decompress used in the COMtune training
+        graph (STE for quantization; PCA is already linear/differentiable)."""
+        if self.kind == "identity":
+            return x
+        if self.kind == "quant":
+            return fake_quantize_ste(x, self.quant)
+        if self.kind == "pca":
+            return pca_decompress(pca_compress(x, self.pca), self.pca)
+        raise ValueError(self.kind)
+
+    def message_elements(self, feature_dim: int) -> int:
+        """How many scalars cross the channel per activation vector."""
+        if self.kind == "pca":
+            return self.pca.reduced_dim
+        return feature_dim
+
+    def bytes_per_element(self) -> float:
+        if self.kind == "quant":
+            return self.quant.bits / 8.0
+        return 4.0

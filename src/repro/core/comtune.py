@@ -1,0 +1,170 @@
+"""COMtune — the paper's contribution (§III-C/D) as a composable JAX module.
+
+Two compositions over a split model ``f = f_out ∘ f_in``:
+
+* Fine-tuning graph (Eq. 8):
+      f_trn = f_out ∘ f_dec ∘ f_d(r) ∘ f_cmp ∘ f_in
+  where ``f_d`` is inverted dropout with rate ``r`` (Eq. 7) emulating the
+  channel + receiver compensation.
+
+* Distributed-inference graph (Eq. 12):
+      y = f_out ∘ f_dec ∘ (1/(1-p) · f_c(p)) ∘ f_cmp ∘ f_in
+  where ``f_c`` is the real (simulated) packet-loss channel (Eq. 1/10) and
+  the receiver compensates by 1/(1-p) (Eq. 11).
+
+``LinkSpec`` carries everything about the emulated link: dropout rate for
+training, loss rate + granularity for serving, the compressor, and whether
+the fused Pallas egress kernel should be used on the serving path.
+
+These functions are architecture-agnostic: ``f_in``/``f_out`` are arbitrary
+callables (CNN halves in the paper reproduction, transformer layer-stacks in
+the LM framework).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import link as link_lib
+from repro.core.compression import Compressor
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Configuration of the emulated IoT link at the split point."""
+
+    dropout_rate: float = 0.0          # r used during COMtune fine-tuning
+    loss_rate: float = 0.0             # p used during DI serving
+    compressor: Compressor = dataclasses.field(default_factory=Compressor)
+    granularity: str = "element"       # "element" (Eq. 1) or "packet" (Eq. 2-3)
+    elements_per_packet: int = 25      # 100 B packets / 4 B floats
+    shuffle: bool = True               # paper's anti-burst interleaving
+    use_kernel: bool = False           # fused Pallas egress on serve path
+    adaptive_compensation: bool = False  # beyond-paper: use observed 1/(1-p̂)
+
+    def with_loss_rate(self, p: float) -> "LinkSpec":
+        return dataclasses.replace(self, loss_rate=p)
+
+    def with_dropout_rate(self, r: float) -> "LinkSpec":
+        return dataclasses.replace(self, dropout_rate=r)
+
+
+# ---------------------------------------------------------------------------
+# Link layers
+# ---------------------------------------------------------------------------
+
+def dropout_link(key: jax.Array, x: jax.Array, rate: float) -> jax.Array:
+    """Eq. (7): inverted dropout — the paper's channel emulation layer."""
+    if rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / jnp.asarray(1.0 - rate, x.dtype), 0.0)
+
+
+def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
+    """Eq. (10)-(11): the serving-time channel + compensation, acting on the
+    *compressed* message representation."""
+    if spec.loss_rate <= 0.0:
+        return x
+    if spec.adaptive_compensation:
+        # Beyond-paper: compensate by the realized keep fraction p̂ rather
+        # than the nominal p — unbiased per-message instead of in expectation.
+        if spec.granularity == "element":
+            mask = link_lib.element_loss_mask(key, x.shape, spec.loss_rate)
+        else:
+            flat = link_lib.packet_loss_mask(
+                key, x.size, spec.loss_rate, spec.elements_per_packet, spec.shuffle
+            )
+            mask = flat.reshape(x.shape)
+        kept = jnp.maximum(mask.mean(), 1e-3)
+        return x * mask.astype(x.dtype) / kept.astype(x.dtype)
+    return link_lib.apply_channel(
+        key,
+        x,
+        spec.loss_rate,
+        granularity=spec.granularity,
+        elements_per_packet=spec.elements_per_packet,
+        shuffle=spec.shuffle,
+        compensate=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Split-model compositions
+# ---------------------------------------------------------------------------
+
+SubModel = Callable[..., jax.Array]  # (params, x, ...) -> activation / logits
+
+
+def comtune_forward(
+    f_in: SubModel,
+    f_out: SubModel,
+    params_in: Any,
+    params_out: Any,
+    x: jax.Array,
+    key: jax.Array,
+    spec: LinkSpec,
+    train: bool = True,
+) -> jax.Array:
+    """Eq. (8): the fine-tuning graph.  Dropout emulates the channel; the
+    compressor is applied as a differentiable roundtrip (STE for quant)."""
+    a = f_in(params_in, x)
+    a = spec.compressor.roundtrip_train(a)
+    if train:
+        a = dropout_link(key, a, spec.dropout_rate)
+    return f_out(params_out, a)
+
+
+def distributed_inference(
+    f_in: SubModel,
+    f_out: SubModel,
+    params_in: Any,
+    params_out: Any,
+    x: jax.Array,
+    key: jax.Array,
+    spec: LinkSpec,
+) -> jax.Array:
+    """Eq. (12): the DI serving graph.
+
+    device side:  a  = f_cmp(f_in(x))          -> transmitted message
+    channel:      a' = f_c(a | p)              -> drops
+    server side:  y  = f_out(f_dec(a' / (1-p)))
+    """
+    a_raw = f_in(params_in, x)
+    msg = spec.compressor.compress(a_raw)
+    if spec.use_kernel and spec.compressor.kind == "quant":
+        from repro.kernels.lossy_link import ops as ll_ops
+
+        a_rec = ll_ops.lossy_link_egress(
+            key,
+            a_raw,
+            spec.compressor.quant,
+            spec.loss_rate,
+        )
+    else:
+        msg = channel_link(key, msg, spec)
+        a_rec = spec.compressor.decompress(msg)
+    return f_out(params_out, a_rec)
+
+
+def message_bytes(spec: LinkSpec, feature_dim: int) -> float:
+    """Size of one transmitted message (per activation vector)."""
+    n = spec.compressor.message_elements(feature_dim)
+    return n * spec.compressor.bytes_per_element()
+
+
+def di_latency_s(
+    spec: LinkSpec,
+    feature_dim: int,
+    batch: int,
+    channel: link_lib.ChannelConfig,
+) -> float:
+    """Communication latency of one DI round (unreliable protocol,
+    §III-B): n_t * l / b."""
+    total_bytes = message_bytes(spec, feature_dim) * batch
+    n_t = -(-int(total_bytes) // channel.packet_bytes)
+    return n_t * channel.slot_time_s()

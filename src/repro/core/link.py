@@ -1,0 +1,206 @@
+"""Unreliable-communication-link model (paper §III-B, Eq. 1-5).
+
+The paper abstracts a lossy IoT network as a channel that drops each packet
+independently with probability ``p`` and never retransmits.  Because the
+sender shuffles activation elements across packets (Eq. 2), the effective
+channel at the element level is i.i.d. Bernoulli (Eq. 1):
+
+    f_c(x | p) = x * m(p),        m_i ~ Bernoulli(1 - p)
+
+We implement BOTH granularities:
+
+* ``element_loss_mask`` — the paper's analytical model (Eq. 1).
+* ``packet_loss_mask``  — the physical model: elements are permuted, packed
+  ``s`` elements per packet, whole packets are dropped (Eq. 2-3).  With a
+  random permutation this is distributionally equivalent to Eq. 1; without
+  the shuffle it produces burst loss (useful for ablations beyond the paper).
+
+Latency model (Eq. 4-5): binomial PMFs over received packets (unreliable
+protocol) and over the number of slots needed to deliver all ``n_t`` packets
+under retransmission (reliable protocol).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Physical channel constants (paper §IV-A)."""
+
+    packet_bytes: int = 100          # packet size l, including MAC/net overhead
+    throughput_bps: float = 9.0e6    # b = 9.0 Mbit/s
+    loss_rate: float = 0.0           # p
+    bytes_per_element: int = 4       # 32-bit float activations by default
+
+    @property
+    def elements_per_packet(self) -> int:
+        return max(1, self.packet_bytes // self.bytes_per_element)
+
+    def num_packets_for_bytes(self, num_bytes: float) -> int:
+        return max(1, -(-int(num_bytes) // self.packet_bytes))  # ceil div
+
+    def num_packets(self, num_elements: int) -> int:
+        return -(-num_elements // self.elements_per_packet)  # ceil div
+
+    def slot_time_s(self) -> float:
+        """Time T to transmit one packet."""
+        return self.packet_bytes * 8.0 / self.throughput_bps
+
+
+# ---------------------------------------------------------------------------
+# Loss masks (Eq. 1-3)
+# ---------------------------------------------------------------------------
+
+def element_loss_mask(key: jax.Array, shape, loss_rate) -> jax.Array:
+    """Eq. (1): i.i.d. Bernoulli keep-mask with E[m] = 1 - p (float32 0/1)."""
+    keep = jax.random.bernoulli(key, 1.0 - loss_rate, shape)
+    return keep.astype(jnp.float32)
+
+
+def packet_loss_mask(
+    key: jax.Array,
+    num_elements: int,
+    loss_rate,
+    elements_per_packet: int,
+    shuffle: bool = True,
+) -> jax.Array:
+    """Eq. (2)-(3): drop whole packets of ``s`` consecutive (post-shuffle)
+    elements.  Returns a flat float32 0/1 keep-mask of length num_elements.
+
+    With ``shuffle=True`` (the paper's anti-burst permutation) the marginal
+    distribution of each element matches Eq. (1).  ``shuffle=False`` models a
+    sender that does not interleave, giving burst loss.
+    """
+    kperm, kdrop = jax.random.split(key)
+    n_packets = -(-num_elements // elements_per_packet)
+    pkt_keep = jax.random.bernoulli(kdrop, 1.0 - loss_rate, (n_packets,))
+    mask = jnp.repeat(pkt_keep, elements_per_packet)[:num_elements]
+    if shuffle:
+        # The sender permutes elements into packets; the receiver un-permutes.
+        # Net effect on the activation vector: a permuted packet mask.
+        perm = jax.random.permutation(kperm, num_elements)
+        mask = jnp.zeros((num_elements,), jnp.float32).at[perm].set(
+            mask.astype(jnp.float32)
+        )
+    return mask.astype(jnp.float32)
+
+
+def apply_channel(
+    key: jax.Array,
+    x: jax.Array,
+    loss_rate,
+    *,
+    granularity: str = "element",
+    elements_per_packet: int = 25,
+    shuffle: bool = True,
+    compensate: bool = True,
+) -> jax.Array:
+    """Transmit ``x`` through the lossy link (Eq. 1/10) and apply the
+    receiver-side ``1/(1-p)`` compensation (Eq. 11) if requested.
+    """
+    if granularity == "element":
+        mask = element_loss_mask(key, x.shape, loss_rate)
+    elif granularity == "packet":
+        flat = packet_loss_mask(
+            key, int(np.prod(x.shape)), loss_rate, elements_per_packet, shuffle
+        )
+        mask = flat.reshape(x.shape)
+    else:
+        raise ValueError(f"unknown granularity: {granularity!r}")
+    y = x * mask.astype(x.dtype)
+    if compensate:
+        y = y / jnp.asarray(1.0 - loss_rate, x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Latency model (Eq. 4-5) — pure NumPy analytics, used by benchmarks/fig4a.
+# ---------------------------------------------------------------------------
+
+def _gammaln(x: np.ndarray) -> np.ndarray:
+    """Stirling-series log-gamma, accurate to ~1e-10 for x >= 1 (no scipy)."""
+    x = np.asarray(x, dtype=np.float64)
+    # Shift x up by 6 for series accuracy, then divide back down.
+    shift = 6
+    xs = x + shift
+    series = (
+        (xs - 0.5) * np.log(xs)
+        - xs
+        + 0.5 * np.log(2.0 * np.pi)
+        + 1.0 / (12.0 * xs)
+        - 1.0 / (360.0 * xs**3)
+        + 1.0 / (1260.0 * xs**5)
+    )
+    corr = np.zeros_like(xs)
+    for i in range(shift):
+        corr += np.log(x + i)
+    return series - corr
+
+
+def log_binom_coeff(n, k):
+    n = np.asarray(n, dtype=np.float64)
+    k = np.asarray(k, dtype=np.float64)
+    return _gammaln(n + 1.0) - _gammaln(k + 1.0) - _gammaln(n - k + 1.0)
+
+
+def received_packets_pmf(n_t: int, loss_rate: float) -> np.ndarray:
+    """Eq. (4): PMF of the number of received packets, support 0..n_t."""
+    n_r = np.arange(n_t + 1)
+    if loss_rate <= 0.0:
+        pmf = np.zeros(n_t + 1)
+        pmf[-1] = 1.0
+        return pmf
+    if loss_rate >= 1.0:
+        pmf = np.zeros(n_t + 1)
+        pmf[0] = 1.0
+        return pmf
+    logp = (
+        log_binom_coeff(n_t, n_r)
+        + (n_t - n_r) * np.log(loss_rate)
+        + n_r * np.log1p(-loss_rate)
+    )
+    pmf = np.exp(logp)
+    return pmf / pmf.sum()
+
+
+def unreliable_latency_s(n_t: int, cfg: ChannelConfig) -> float:
+    """No retransmission: deterministic n_t * l / b (paper §III-B)."""
+    return n_t * cfg.slot_time_s()
+
+
+def reliable_latency_pmf(n_t: int, cfg: ChannelConfig, max_slots: int | None = None):
+    """Eq. (5): latency tau = (number of slots) * T until all n_t packets are
+    delivered under stop-and-wait-style retransmission.  The slot count K
+    follows a negative-binomial: P(K=k) = C(k-1, n_t-1) p^(k-n_t) (1-p)^n_t.
+
+    Returns (latency_seconds, pmf) arrays over k = n_t .. max_slots.
+    """
+    p = cfg.loss_rate
+    if max_slots is None:
+        # Enough tail for p up to 0.9.
+        max_slots = max(n_t + 1, int(n_t / max(1e-9, 1.0 - p) * 6))
+    k = np.arange(n_t, max_slots + 1)
+    if p <= 0.0:
+        pmf = np.zeros_like(k, dtype=np.float64)
+        pmf[0] = 1.0
+    else:
+        logp = (
+            log_binom_coeff(k - 1, n_t - 1)
+            + (k - n_t) * np.log(p)
+            + n_t * np.log1p(-p)
+        )
+        pmf = np.exp(logp)
+        pmf = pmf / pmf.sum()
+    return k.astype(np.float64) * cfg.slot_time_s(), pmf
+
+
+def latency_cdf(latency_s: np.ndarray, pmf: np.ndarray):
+    order = np.argsort(latency_s)
+    return latency_s[order], np.cumsum(pmf[order])

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each validated in
+interpret mode against a pure-jnp oracle (ref.py):
+
+* ``lossy_link``      — fused split-point egress (quantize+mask+dequantize+
+                        compensate), the paper's per-DI-round hot path;
+* ``flash_attention`` — blocked online-softmax attention w/ sliding window;
+* ``ssm_scan``        — chunked linear recurrence for Mamba/mLSTM states.
+"""

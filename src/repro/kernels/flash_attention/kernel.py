@@ -1,0 +1,153 @@
+"""FlashAttention forward kernel for TPU (Pallas): blocked online-softmax
+causal attention with sliding-window support.
+
+Grid: (batch*heads, num_q_blocks).  Per grid step the kernel holds one
+(block_q, head_dim) query tile in VMEM plus the full (kv_len, head_dim)
+K/V panels for that head (BlockSpec-delivered), and walks KV blocks with a
+``fori_loop`` whose bounds are *clipped to the causal/window-reachable
+range* — out-of-window KV blocks are never touched, which is what makes
+gemma3-style local attention cheap.
+
+MXU alignment: block_q / block_kv are multiples of 128 (padded as needed);
+head_dim is the matmul contraction dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref,    # (1, block_q, hd)
+    k_ref,    # (1, kv_len, hd)
+    v_ref,    # (1, kv_len, hd)
+    o_ref,    # (1, block_q, hd)
+    *,
+    block_q: int,
+    block_kv: int,
+    kv_len: int,
+    kv_valid: int,
+    q_offset: int,
+    causal: bool,
+    window: int,
+    softcap: float,
+):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                       # (bq, hd)
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    q_pos = q_offset + qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_kv_blocks = kv_len // block_kv
+    # Causal upper bound: last kv block that any of this tile's queries can
+    # see.  Window lower bound: first block still inside the window.
+    if causal:
+        hi = jnp.minimum(
+            (q_offset + (qi + 1) * block_q + block_kv - 1) // block_kv, n_kv_blocks
+        )
+    else:
+        hi = n_kv_blocks
+    if window > 0:
+        lo = jnp.maximum((q_offset + qi * block_q - window + 1) // block_kv, 0)
+    else:
+        lo = 0
+
+    def body(kj, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(kj * block_kv, block_kv), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kj * block_kv, block_kv), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                           # (bq, bkv)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = kj * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        msk = (k_pos < kv_valid)[None, :] & jnp.ones((block_q, 1), jnp.bool_)
+        if causal:
+            msk &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            msk &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(msk, s, NEG_INF)
+        s_max = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, s_max)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_new = acc * corr[:, None] + pv
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "block_q", "block_kv", "softcap", "interpret"
+    ),
+)
+def flash_attention_kernel(
+    q: jax.Array,    # (BH, Sq, hd)
+    k: jax.Array,    # (BH, Skv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    pad_q = (-sq) % bq
+    pad_kv = (-skv) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        # Padded KV positions get k_pos > any causal q_pos -> masked out by
+        # the causal test only if queries exist; also guard explicitly.
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0)))
+    kv_len = k.shape[1]
+    grid = (bh, q.shape[1] // bq)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            block_q=bq,
+            block_kv=bkv,
+            kv_len=kv_len,
+            kv_valid=skv,
+            q_offset=q_offset,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, kv_len, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, kv_len, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

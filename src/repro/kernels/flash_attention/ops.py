@@ -1,0 +1,50 @@
+"""Jitted GQA-aware wrapper around the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,    # (B, Sq, H, hd)
+    k: jax.Array,    # (B, Skv, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """GQA front-end: broadcasts KV heads to query heads, folds (B, H) into
+    the kernel's batch axis."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    out = flash_attention_kernel(
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_kv=block_kv,
+        softcap=softcap,
+        interpret=_use_interpret(),
+    )
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

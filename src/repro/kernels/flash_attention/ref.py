@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: naive masked softmax attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def flash_attention_ref(
+    q: jax.Array,    # (BH, Sq, hd)
+    k: jax.Array,    # (BH, Skv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    sq, skv = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    msk = jnp.ones((sq, skv), bool)
+    if causal:
+        msk &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        msk &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(msk[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

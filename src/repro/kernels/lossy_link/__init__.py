@@ -1,0 +1,1 @@
+from repro.kernels.lossy_link.ops import lossy_link_egress  # noqa: F401

@@ -1,0 +1,36 @@
+"""Jitted public wrapper: ties the kernel into core.comtune's serve path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import QuantSpec
+from repro.kernels.lossy_link.kernel import lossy_link_egress_kernel
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lossy_link_egress(
+    key: jax.Array,
+    x: jax.Array,           # (..., D) split-point activation
+    quant: QuantSpec,
+    loss_rate: float,
+) -> jax.Array:
+    """Quantize -> mask(p) -> dequantize -> 1/(1-p), fused."""
+    shape = x.shape
+    d = shape[-1]
+    flat = x.reshape(-1, d)
+    u = jax.random.uniform(key, flat.shape, jnp.float32)
+    out = lossy_link_egress_kernel(
+        flat,
+        u,
+        quant.s_min.astype(jnp.float32),
+        quant.s_max.astype(jnp.float32),
+        bits=quant.bits,
+        loss_rate=float(loss_rate),
+        interpret=_use_interpret(),
+    )
+    return out.reshape(shape)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused lossy-link egress (bit-exact reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lossy_link_egress_ref(
+    x: jax.Array,
+    u: jax.Array,
+    s_min: jax.Array,
+    s_max: jax.Array,
+    *,
+    bits: int,
+    loss_rate: float,
+) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    levels = jnp.float32(2**bits - 1)
+    rng = jnp.maximum(s_max.astype(jnp.float32) - s_min.astype(jnp.float32), 1e-8)
+    clipped = jnp.clip(x32, s_min, s_max)
+    code = jnp.round((clipped - s_min) / rng * levels)
+    deq = code / levels * rng + s_min
+    keep = u.astype(jnp.float32) >= jnp.float32(loss_rate)
+    comp = 1.0 / (1.0 - jnp.float32(loss_rate)) if loss_rate > 0.0 else 1.0
+    return jnp.where(keep, deq * comp, 0.0).astype(x.dtype)

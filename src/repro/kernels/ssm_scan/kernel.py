@@ -1,0 +1,85 @@
+"""Chunked linear-recurrence scan kernel (Mamba / mLSTM state update).
+
+Computes all prefix states of   h[t] = a[t] * h[t-1] + b[t]   (elementwise
+over a flattened state dim D = d_inner * d_state), the recurrence at the
+heart of selective SSMs.
+
+TPU mapping: grid = (D_tiles, T_chunks) with T the *sequential* (arbitrary)
+grid dimension — the running state h lives in a VMEM scratch tile (block_d,)
+that persists across T-chunk grid steps (TPU grids execute sequentially, so
+the scratch carries the recurrence between chunks; ``pl.when`` zeroes or
+seeds it from h0 on the first chunk).  Inside a chunk the recurrence is an
+unrolled VPU loop over ``block_t`` rows of the (block_t, block_d) tile.
+
+block_d is a multiple of 128 (VPU lanes); block_t trades VMEM footprint
+(2 tiles of block_t x block_d f32) against grid overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, o_ref, h_scratch, *, block_t: int):
+    tj = pl.program_id(1)
+
+    @pl.when(tj == 0)
+    def _seed():
+        h_scratch[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)      # (bt, bd)
+    b = b_ref[...].astype(jnp.float32)
+    h = h_scratch[...]                      # (bd,)
+
+    def body(i, carry):
+        h = carry
+        h = a[i] * h + b[i]
+        o_ref[i, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, body, h, unroll=8)
+    h_scratch[...] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_d", "interpret")
+)
+def ssm_scan_kernel(
+    a: jax.Array,     # (T, D) decay
+    b: jax.Array,     # (T, D) increment
+    h0: jax.Array,    # (D,) initial state
+    *,
+    block_t: int = 128,
+    block_d: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns all prefix states h: (T, D)."""
+    t, d = a.shape
+    bt = min(block_t, t)
+    bd = min(block_d, d)
+    pad_t = (-t) % bt
+    pad_d = (-d) % bd
+    if pad_t or pad_d:
+        a = jnp.pad(a, ((0, pad_t), (0, pad_d)))
+        b = jnp.pad(b, ((0, pad_t), (0, pad_d)))
+        h0 = jnp.pad(h0, (0, pad_d))
+    grid = (a.shape[1] // bd, a.shape[0] // bt)  # D outer, T inner/sequential
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, block_t=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bd), lambda dj, tj: (tj, dj)),
+            pl.BlockSpec((bt, bd), lambda dj, tj: (tj, dj)),
+            pl.BlockSpec((bd,), lambda dj, tj: (dj,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda dj, tj: (tj, dj)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:t, :d]

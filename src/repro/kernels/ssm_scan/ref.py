@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: lax.scan linear recurrence h[t] = a[t]*h[t-1] + b[t]."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """a, b: (T, D); h0: (D,) -> all prefix states (T, D) in f32."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at.astype(jnp.float32) * h + bt.astype(jnp.float32)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a, b))
+    return hs

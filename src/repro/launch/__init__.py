@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharded step builders, multi-pod dry-run,
+and the real train/serve drivers."""

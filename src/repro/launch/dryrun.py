@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh with 512 placeholder CPU devices, and extract the
+roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first two lines of this module — jax locks
+the device count on first init, so no repro/jax import may precede them.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k [--multi-pod] [--out results.json] [--print-hlo]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_sharded_step
+from repro.optim import AdamConfig
+from repro.roofline import analysis as roofline
+
+
+def resolve_config(arch: str, shape_name: str, window: int = 8192):
+    """long_500k on pure full-attention archs runs the documented
+    sliding-window VARIANT (DESIGN.md §5) so every pair lowers."""
+    cfg = get_config(arch)
+    variant = "original"
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        cfg = cfg.long_context_variant(window)
+        variant = f"swa{window}"
+    return cfg, variant
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            print_hlo: bool = False, adam_cfg=None, overrides=None,
+            fsdp="on", moe_shard_map: bool = False):
+    shape_cfg = get_shape(shape_name)
+    cfg, variant = resolve_config(arch, shape_name)
+    if overrides:
+        cfg = cfg.with_updates(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    adam_cfg = adam_cfg or AdamConfig(state_dtype="bfloat16", grad_clip_norm=1.0)
+
+    t0 = time.time()
+    with mesh:
+        jitted, args = build_sharded_step(cfg, shape_cfg, mesh, adam_cfg=adam_cfg,
+                                          fsdp=fsdp, moe_shard_map=moe_shard_map)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if print_hlo:
+        print(hlo)
+
+    tokens = shape_cfg.global_batch * (
+        1 if shape_cfg.is_decode else shape_cfg.seq_len
+    )
+    params_shapes = args[0]
+    bytes_per_device = None
+    try:
+        total = (
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+        )
+        bytes_per_device = total  # memory_analysis is per-device under SPMD
+    except Exception:
+        pass
+
+    rep = roofline.analyze(
+        arch=arch + ("" if variant == "original" else f"({variant})"),
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        cost=cost,
+        hlo_text=hlo,
+        cfg=cfg,
+        shape_cfg=shape_cfg,
+        params_shapes=params_shapes,
+        tokens=tokens,
+        decode=shape_cfg.is_decode,
+        bytes_per_device=bytes_per_device,
+    )
+    d = rep.to_dict()
+    d.update(
+        variant=variant,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory_analysis=str(mem),
+        n_params=roofline.count_params(params_shapes),
+        n_active_params=roofline.active_params(cfg, params_shapes),
+    )
+    print(f"== {arch} x {shape_name} on {mesh_name} ({variant}) ==")
+    print(f"memory_analysis: {mem}")
+    print(
+        f"analytic: flops={d['flops']:.3e} hbm_bytes={d['hbm_bytes']:.3e} | "
+        f"raw cost_analysis (body-once): flops={d['raw_cost_flops']:.3e} "
+        f"bytes={d['raw_cost_bytes']:.3e} | "
+        f"collective_bytes/dev={d['collective_bytes']:.3e}"
+    )
+    print(
+        f"roofline: compute={d['compute_s']:.3e}s memory={d['memory_s']:.3e}s "
+        f"collective={d['collective_s']:.3e}s -> bottleneck={d['bottleneck']} "
+        f"useful_flops_frac={d['useful_flops_frac']:.3f}"
+    )
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp-mode", default=None, choices=["on", "off", "expert"])
+    ap.add_argument("--moe-shard-map", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    results = []
+    pairs = (
+        [(a, s) for a in sorted(ARCHITECTURES) for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    done = set()
+    if args.out and args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if not r.get("error"):
+                    done.add((r["arch"].split("(")[0], r["shape"]))
+                    results.append(r)
+    ok = True
+    for arch, shape in pairs:
+        if (arch, shape) in done:
+            print(f"skip {arch} x {shape} (already done)")
+            continue
+        try:
+            r = run_one(arch, shape, multi_pod=args.multi_pod,
+                        print_hlo=args.print_hlo,
+                        fsdp=args.fsdp_mode or ("off" if args.no_fsdp else "on"),
+                        moe_shard_map=args.moe_shard_map,
+                        overrides={"kv_cache_dtype": "int8"} if args.kv_int8 else None)
+        except Exception:
+            ok = False
+            traceback.print_exc()
+            r = {"arch": arch, "shape": shape, "error": True,
+                 "trace": traceback.format_exc()[-2000:]}
+        results.append(r)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Real training driver (CPU-scale): COMtune fine-tuning of a reduced
+architecture on the synthetic LM stream, with checkpointing and eval.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --steps 200 --batch 8 --seq 128 [--full-size] [--link off|train]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHITECTURES, get_config
+from repro.data import lm_batch_iterator, make_lm_dataset
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.optim import AdamConfig, init_adam, schedule
+
+
+def train(
+    arch: str,
+    steps: int = 200,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    link_mode: str = "train",
+    full_size: bool = False,
+    ckpt_dir: str | None = None,
+    log_every: int = 20,
+    seed: int = 0,
+):
+    cfg = get_config(arch)
+    if not full_size:
+        cfg = cfg.reduced()
+    adam_cfg = AdamConfig(
+        lr=lr,
+        grad_clip_norm=1.0,
+        schedule=schedule.warmup_cosine(max(10, steps // 20), steps),
+    )
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_lm(key, cfg)
+    opt_state = init_adam(params, adam_cfg)
+    step_fn = jax.jit(make_train_step(cfg, adam_cfg, link_mode=link_mode))
+
+    tokens = make_lm_dataset(cfg.vocab_size, n_tokens=max(100_000, batch * seq * 50))
+    it = lm_batch_iterator(tokens, batch, seq, seed=seed)
+
+    fe = (
+        jnp.zeros((batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+        if cfg.frontend
+        else None
+    )
+    losses = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        b = {"tokens": jnp.asarray(next(it))}
+        if fe is not None:
+            b["frontend_embed"] = fe
+        key, sub = jax.random.split(key)
+        params, opt_state, metrics = step_fn(params, opt_state, b, sub)
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == 1:
+            print(
+                f"step {step:5d} loss {losses[-1]:.4f} "
+                f"grad_norm {float(metrics['grad_norm']):.3f} "
+                f"({(time.time()-t0)/step:.2f}s/step)"
+            )
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, {"params": params})
+        print(f"saved checkpoint to {ckpt_dir}")
+    return params, losses, cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--link", default="train", choices=["train", "off"])
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    _, losses, _ = train(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        link_mode=args.link,
+        full_size=args.full_size,
+        ckpt_dir=args.ckpt_dir,
+    )
+    print(f"final loss {np.mean(losses[-10:]):.4f} (start {np.mean(losses[:5]):.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model zoo: unified transformer stack (attn/mamba/xLSTM/MoE), the paper's
+VGG-style CNN, caches, and modality-frontend stubs."""
+
+from repro.models import (  # noqa: F401
+    attention,
+    cache,
+    cnn,
+    common,
+    frontends,
+    lm,
+    mamba,
+    mlp,
+    moe,
+    rope,
+    transformer,
+    xlstm,
+)

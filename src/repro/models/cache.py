@@ -1,0 +1,58 @@
+"""Decode-state containers (KV caches, conv/SSM states, xLSTM states).
+
+Layout mirrors the transformer stack: an (optional) list of per-prologue-layer
+states plus, for each position ``j`` in the repeating unit pattern, a state
+pytree stacked over the ``U`` scan units (leading axis U).  Windowed attention
+layers allocate ``min(max_seq, window)`` rotating slots — this is what makes
+gemma3-style 5:1 local:global long-context decode cheap.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention, mamba, xlstm
+from repro.models.common import dtype_of
+
+
+def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    if spec.kind == "attn":
+        length = attention.cache_len(spec, max_seq)
+        return attention.init_kv_cache(
+            batch, length, cfg.num_kv_heads, cfg.resolved_head_dim, dtype,
+            kv_cache_dtype=cfg.kv_cache_dtype,
+        )
+    if spec.kind == "mamba":
+        return mamba.init_mamba_cache(batch, cfg, dtype)
+    if spec.kind == "mlstm":
+        return xlstm.init_mlstm_cache(batch, cfg)
+    if spec.kind == "slstm":
+        return xlstm.init_slstm_cache(batch, cfg)
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Build the full decode state for a model."""
+    dtype = dtype_of(cfg.dtype)
+    u = cfg.resolved_num_units
+    prologue = [
+        _layer_cache(spec, cfg, batch, max_seq, dtype) for spec in cfg.prologue
+    ]
+    units: List[Any] = []
+    for spec in cfg.unit_pattern:
+        one = _layer_cache(spec, cfg, batch, max_seq, dtype)
+        units.append(
+            jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (u,) + a.shape), one
+            )
+        )
+    return {"prologue": prologue, "units": units}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStruct skeleton of the cache (for dry-run input_specs)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))

@@ -1,0 +1,165 @@
+"""The paper's DNN (Fig. 3): a VGG16-style CNN for 32x32 image
+classification — five conv blocks (a conv layers, b channels) with
+BatchNorm + 2x2 max-pool, then an FC block (256, 128, classes).
+
+The model is split after block 1 (paper §IV-A): the IoT device runs block 1
+(activation dims 16*16*64 = 16,384 -> 65.5 kB in fp32, matching the paper),
+the edge server runs blocks 2-5 + FC.  ``width_scale`` < 1 gives a reduced
+variant for CPU-budget experiments (documented wherever used).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    blocks: Tuple[Tuple[int, int], ...] = ((2, 64), (2, 128), (3, 256), (3, 512), (3, 512))
+    fc: Tuple[int, ...] = (256, 128)
+    num_classes: int = 10
+    image_size: int = 32
+    in_channels: int = 3
+    split_block: int = 1          # device runs blocks[:split_block]
+    width_scale: float = 1.0
+
+    def scaled_blocks(self):
+        return tuple((a, max(8, int(b * self.width_scale))) for a, b in self.blocks)
+
+    @property
+    def split_activation_dim(self) -> int:
+        size = self.image_size // (2**self.split_block)
+        return size * size * self.scaled_blocks()[self.split_block - 1][1]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = jnp.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def init_cnn(key, cfg: CNNConfig) -> Tuple[Params, Params]:
+    """Returns (params, bn_state)."""
+    params: Params = {"blocks": [], "fc": []}
+    state: Params = {"blocks": []}
+    cin = cfg.in_channels
+    for a, b in cfg.scaled_blocks():
+        key, *ks = jax.random.split(key, a + 1)
+        convs = []
+        for i in range(a):
+            convs.append(
+                {"w": _conv_init(ks[i], 3, 3, cin if i == 0 else b, b),
+                 "b": jnp.zeros((b,), jnp.float32)}
+            )
+        params["blocks"].append(
+            {"convs": convs,
+             "bn": {"scale": jnp.ones((b,), jnp.float32),
+                    "bias": jnp.zeros((b,), jnp.float32)}}
+        )
+        state["blocks"].append(
+            {"mean": jnp.zeros((b,), jnp.float32), "var": jnp.ones((b,), jnp.float32)}
+        )
+        cin = b
+    feat = cfg.image_size // (2 ** len(cfg.blocks))
+    dim = feat * feat * cfg.scaled_blocks()[-1][1]
+    dims = (dim,) + cfg.fc + (cfg.num_classes,)
+    key, *ks = jax.random.split(key, len(dims))
+    for i in range(len(dims) - 1):
+        params["fc"].append(
+            {"w": dense_init(ks[i], (dims[i], dims[i + 1]), jnp.float32, scale=1.4),
+             "b": jnp.zeros((dims[i + 1],), jnp.float32)}
+        )
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _batchnorm(x, p, s, train: bool, momentum: float = 0.9):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+        new_s = {
+            "mean": momentum * s["mean"] + (1 - momentum) * mean,
+            "var": momentum * s["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def _block(x, bp, bs, train: bool):
+    n = len(bp["convs"])
+    new_bs = bs
+    for i, cp in enumerate(bp["convs"]):
+        x = _conv(x, cp["w"], cp["b"])
+        if i == n - 1:  # BN after the last conv of the block (paper Fig. 3)
+            x, new_bs = _batchnorm(x, bp["bn"], bs, train)
+        x = jax.nn.relu(x)
+    return _maxpool(x), new_bs
+
+
+def forward_device(params, state, x, cfg: CNNConfig, train: bool = False):
+    """Blocks [0, split): runs on the IoT device.  Returns flat activation
+    (B, split_activation_dim) and updated BN state slices."""
+    new_states = []
+    for i in range(cfg.split_block):
+        x, ns = _block(x, params["blocks"][i], state["blocks"][i], train)
+        new_states.append(ns)
+    b = x.shape[0]
+    return x.reshape(b, -1), new_states
+
+
+def forward_server(params, state, a_flat, cfg: CNNConfig, train: bool = False):
+    """Blocks [split, end) + FC: runs on the edge server."""
+    nblocks = len(cfg.scaled_blocks())
+    size = cfg.image_size // (2**cfg.split_block)
+    ch = cfg.scaled_blocks()[cfg.split_block - 1][1]
+    x = a_flat.reshape(a_flat.shape[0], size, size, ch)
+    new_states = []
+    for i in range(cfg.split_block, nblocks):
+        x, ns = _block(x, params["blocks"][i], state["blocks"][i], train)
+        new_states.append(ns)
+    x = x.reshape(x.shape[0], -1)
+    for j, fp in enumerate(params["fc"]):
+        x = x @ fp["w"] + fp["b"]
+        if j < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x, new_states
+
+
+def forward(params, state, x, cfg: CNNConfig, train: bool = False, link_fn=None):
+    """Full model with optional link layer at the split (COMtune Eq. 8)."""
+    a, dev_states = forward_device(params, state, x, cfg, train)
+    if link_fn is not None:
+        a = link_fn(a)
+    logits, srv_states = forward_server(params, state, a, cfg, train)
+    new_state = {"blocks": dev_states + srv_states}
+    return logits, new_state

@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+For the VLM (qwen2-vl) and audio (musicgen) architectures we implement the
+*language/decoder transformer* only; the vision encoder (ViT/SigLIP +
+projector) and the audio codec (EnCodec) are stubbed: ``input_specs()``
+provides precomputed patch/frame embeddings of the right shape, and the
+model consumes them by overwriting the first ``frontend_len`` token
+embeddings (after a small trainable adapter projection, so the fusion
+boundary is still learnable).
+
+musicgen note: its decoder consumes EnCodec *tokens* (vocab 2048) directly,
+so the codec stub is simply "tokens are precomputed"; we additionally accept
+optional conditioning frame embeddings through the same adapter.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init
+
+
+def init_frontend_adapter(key, cfg: ModelConfig, dtype) -> Params:
+    return {"proj": dense_init(key, (cfg.d_model, cfg.d_model), dtype)}
+
+
+def fuse_frontend(
+    p: Params,
+    x: jax.Array,                  # (B, S, d) token embeddings
+    frontend_embed: Optional[jax.Array],  # (B, F, d) stub embeddings
+) -> jax.Array:
+    if frontend_embed is None:
+        return x
+    fused = frontend_embed.astype(x.dtype) @ p["proj"]
+    f = fused.shape[1]
+    return jnp.concatenate([fused, x[:, f:]], axis=1)

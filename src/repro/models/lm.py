@@ -1,0 +1,211 @@
+"""Causal LM assembled from the unified stack, with the COMtune link layer
+as a first-class feature (paper Eq. 8 for training, Eq. 12 for serving).
+
+The link sits between the device-side and server-side unit scans; its
+compression parameters (quantization scale factors / PCA basis) live inside
+the parameter pytree so calibration results are part of checkpoints and the
+lowered multi-pod program.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import comtune
+from repro.core.compression import Compressor, PCASpec, QuantSpec
+from repro.models import frontends, rope as rope_lib, transformer
+from repro.models.common import (
+    Params,
+    apply_norm,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_norm,
+    split_keys,
+)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_link_params(key, cfg: ModelConfig, dtype) -> Params:
+    """Compression parameters at the split point (calibrated later)."""
+    d = cfg.d_model
+    link = cfg.link
+    p: Params = {}
+    if link.compression == "quant":
+        p["s_min"] = jnp.full((d,), -6.0, jnp.float32)
+        p["s_max"] = jnp.full((d,), 6.0, jnp.float32)
+    elif link.compression == "pca":
+        dim = link.pca_dim or d // 4
+        w = dense_init(key, (dim, d), jnp.float32, scale=1.0)
+        p["w"] = w
+        p["b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    ks = split_keys(key, 6)
+    p: Params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "stack": transformer.init_stack(ks[1], cfg, dtype),
+        "final_norm": init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+        "link": init_link_params(ks[3], cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[4], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.frontend:
+        p["frontend"] = frontends.init_frontend_adapter(ks[5], cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Link layer constructors
+# ---------------------------------------------------------------------------
+
+def _compressor_from_params(cfg: ModelConfig, link_params: Params) -> Compressor:
+    link = cfg.link
+    if link.compression == "quant":
+        return Compressor(
+            kind="quant",
+            quant=QuantSpec(
+                bits=link.quant_bits,
+                s_min=link_params["s_min"],
+                s_max=link_params["s_max"],
+            ),
+        )
+    if link.compression == "pca":
+        return Compressor(
+            kind="pca", pca=PCASpec(w=link_params["w"], b=link_params["b"])
+        )
+    return Compressor(kind="identity")
+
+
+def make_link_fn(
+    cfg: ModelConfig,
+    link_params: Params,
+    key: Optional[jax.Array],
+    mode: str,
+    loss_rate: Optional[float] = None,
+    spec_overrides: Optional[dict] = None,
+):
+    """Build the function applied at the split point.
+
+    mode:
+      "train"   -> Eq. 8:  STE-compressed roundtrip + dropout(r)
+      "serve"   -> Eq. 12: compress -> channel(p) -> 1/(1-p) -> decompress
+      "clean"   -> compression only, no loss (reliable-protocol reference)
+      "off"     -> None (link disabled; plain model)
+    """
+    if mode == "off":
+        return None
+    compressor = _compressor_from_params(cfg, link_params)
+    link = cfg.link
+    spec = comtune.LinkSpec(
+        dropout_rate=link.dropout_rate,
+        loss_rate=link.loss_rate if loss_rate is None else loss_rate,
+        compressor=compressor,
+        **(spec_overrides or {}),
+    )
+
+    if mode == "train":
+
+        def fn(x):
+            a = compressor.roundtrip_train(x)
+            return comtune.dropout_link(key, a, spec.dropout_rate)
+
+    elif mode == "serve":
+
+        def fn(x):
+            msg = compressor.compress(x)
+            msg = comtune.channel_link(key, msg, spec)
+            return compressor.decompress(msg)
+
+    elif mode == "clean":
+
+        def fn(x):
+            return compressor.decompress(compressor.compress(x))
+
+    else:
+        raise ValueError(mode)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: Params,
+    tokens: jax.Array,                 # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    frontend_embed: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index=None,
+    link_key: Optional[jax.Array] = None,
+    link_mode: str = "off",
+    loss_rate: Optional[float] = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (logits (B, S, V) float32, new_cache, moe_aux)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(jnp.float32(cfg.d_model)), x.dtype)
+    if cfg.frontend and frontend_embed is not None:
+        x = frontends.fuse_frontend(params["frontend"], x, frontend_embed)
+
+    if positions is None:
+        offset = cache_index if cache_index is not None else 0
+        positions = rope_lib.default_positions(
+            b, s, offset=offset, mrope=bool(cfg.mrope_sections)
+        )
+
+    link_fn = make_link_fn(
+        cfg, params["link"], link_key, link_mode, loss_rate=loss_rate
+    )
+    x, new_cache, aux = transformer.run_stack(
+        params["stack"],
+        x,
+        cfg,
+        positions,
+        cache=cache,
+        cache_index=cache_index,
+        link_fn=link_fn,
+        mode=mode,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["lm_head"]
+    return logits.astype(jnp.float32), new_cache, aux
+
+
+def lm_loss(
+    logits: jax.Array, tokens: jax.Array, aux: jax.Array, aux_coef: float
+) -> jax.Array:
+    """Next-token cross entropy (shift-by-one) + MoE load-balance aux.
+
+    Sharded-vocab-safe formulation: the target logit is extracted with a
+    one-hot contraction over the (model-sharded) vocab dim and the logsumexp
+    is a reduction — both lower to tiny (B, S) all-reduces.  The naive
+    ``take_along_axis(log_softmax(...))`` gathers the full f32 logits across
+    the mesh (measured: 2x40 GB/device/step on qwen1.5-0.5b x train_4k;
+    see EXPERIMENTS.md §Perf iteration 1)."""
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(targets, lg.shape[-1], dtype=lg.dtype)
+    target_logit = jnp.sum(lg * onehot, axis=-1)
+    nll = lse - target_logit
+    return nll.mean() + aux_coef * aux

@@ -1,0 +1,184 @@
+"""Mamba selective-SSM block (Jamba's recurrent layer).
+
+Training/prefill uses a **chunked parallel scan**: `lax.scan` over chunks of
+``cfg.scan_chunk`` positions, `lax.associative_scan` inside each chunk —
+activation memory is O(B · chunk · d_inner · d_state) rather than O(B · S ·
+d_inner · d_state).  Decode is a single recurrent update on carried
+(conv_state, ssm_state).  The Pallas kernel in ``repro/kernels/ssm_scan``
+implements the same chunked recurrence with explicit VMEM tiling.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, split_keys
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    r = cfg.mamba_dt_rank
+    dc = cfg.mamba_d_conv
+    ks = split_keys(key, 6)
+    # S4D-real initialization for A.
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype, scale=1.0),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * n), dtype),
+        "dt_proj": dense_init(ks[3], (r, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(~0.01)
+        "A_log": jnp.log(a_init).astype(jnp.float32),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: (B, S, di), w: (dc, di)."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for j in range(dc):
+        out = out + pad[:, j : j + s, :] * w[j][None, None, :]
+    return out + b
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
+    """x_t: (B, di); conv_state: (B, dc-1, di) holding previous inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, dc, di)
+    out = jnp.einsum("bcd,cd->bd", window, w) + b
+    new_state = window[:, 1:, :]
+    return out, new_state
+
+
+def _ssm_params(p: Params, x_conv: jax.Array, cfg: ModelConfig):
+    """x_conv (..., di) -> (dA or (dt, A)), dBx pieces."""
+    r, n = cfg.mamba_dt_rank, cfg.mamba_d_state
+    proj = x_conv @ p["x_proj"]
+    dt_low, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (..., di)
+    a = -jnp.exp(p["A_log"])  # (di, N)
+    return dt, a, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def _chunked_selective_scan(
+    dt: jax.Array,      # (B, S, di) f32
+    a: jax.Array,       # (di, N) f32
+    b_ssm: jax.Array,   # (B, S, N)
+    c_ssm: jax.Array,   # (B, S, N)
+    x: jax.Array,       # (B, S, di) f32
+    chunk: int,
+    h0: Optional[jax.Array] = None,   # (B, di, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, di), h_final (B, di, N))."""
+    bsz, s, di = x.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    da = jnp.exp(dt[..., None] * a[None, None])                  # (B, S', di, N)
+    dbx = dt[..., None] * b_ssm[:, :, None, :] * x[..., None]    # (B, S', di, N)
+    da = da.reshape(bsz, nc, chunk, di, n)
+    dbx = dbx.reshape(bsz, nc, chunk, di, n)
+    c_ssm = c_ssm.reshape(bsz, nc, chunk, n)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return ar * al, ar * bl + br
+
+    def chunk_step(h, inputs):
+        da_c, dbx_c, c_c = inputs  # (B, chunk, di, N), ..., (B, chunk, N)
+        acum, bcum = jax.lax.associative_scan(combine, (da_c, dbx_c), axis=1)
+        h_all = acum * h[:, None] + bcum                          # (B, chunk, di, N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_c)
+        return h_all[:, -1], y
+
+    h_init = h0 if h0 is not None else jnp.zeros((bsz, di, n), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_step,
+        h_init,
+        (
+            jnp.swapaxes(da, 0, 1),
+            jnp.swapaxes(dbx, 0, 1),
+            jnp.swapaxes(c_ssm, 0, 1),
+        ),
+    )
+    y = jnp.swapaxes(ys, 0, 1).reshape(bsz, nc * chunk, di)[:, :s]
+    return y, h_final
+
+
+def init_mamba_cache(batch: int, cfg: ModelConfig, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def mamba_forward(
+    p: Params,
+    x: jax.Array,                  # (B, S, d)
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    bsz, s, _ = x.shape
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if cache is not None and s == 1:
+        # ---- decode ----
+        x_conv, conv_state = _conv_step(
+            x_in[:, 0], cache["conv"].astype(x_in.dtype), p["conv_w"], p["conv_b"]
+        )
+        x_conv = jax.nn.silu(x_conv)
+        dt, a, b_ssm, c_ssm = _ssm_params(p, x_conv, cfg)
+        # x_conv is (B, di) here, so dt: (B, di); b_ssm/c_ssm: (B, N)
+        da = jnp.exp(dt[..., None] * a[None])                  # (B, di, N)
+        dbx = dt[..., None] * b_ssm[:, None, :] * x_conv.astype(jnp.float32)[..., None]
+        h = da * cache["ssm"] + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm)
+        y = y + p["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+        out = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
+        return out @ p["out_proj"], new_cache
+
+    # ---- train / prefill ----
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, a, b_ssm, c_ssm = _ssm_params(p, x_conv, cfg)
+    # b_ssm/c_ssm per-position: (B, S, N)
+    y, h_final = _chunked_selective_scan(
+        dt,
+        a,
+        b_ssm,
+        c_ssm,
+        x_conv.astype(jnp.float32),
+        cfg.scan_chunk,
+        h0=cache["ssm"] if cache is not None else None,
+    )
+    y = y + p["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    new_cache = None
+    if cache is not None:
+        dc = cfg.mamba_d_conv
+        tail = x_in[:, -(dc - 1) :, :]
+        if s < dc - 1:
+            tail = jnp.concatenate([cache["conv"].astype(x_in.dtype)[:, s:], x_in], axis=1)
+        new_cache = {"conv": tail.astype(cache["conv"].dtype), "ssm": h_final}
+    return out @ p["out_proj"], new_cache

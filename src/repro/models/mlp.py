@@ -1,0 +1,30 @@
+"""Dense FFN: SwiGLU (silu) / GeGLU (gelu) gated, or plain 2-layer MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, activation, dense_init, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> Params:
+    ks = split_keys(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_forward(p: Params, x: jax.Array, act_name: str, gated: bool) -> jax.Array:
+    act = activation(act_name)
+    up = x @ p["w_up"]
+    if gated:
+        up = act(x @ p["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ p["w_down"]

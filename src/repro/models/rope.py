@@ -1,0 +1,77 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191): the head_dim/2 rotary frequency channels are
+partitioned into ``sections`` (temporal, height, width); each section rotates
+with its own position stream.  Positions therefore have shape (B, 3, S) for
+M-RoPE and (B, S) for standard RoPE.  For pure-text spans all three streams
+carry the same value, which makes M-RoPE degenerate to RoPE exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    exponents = jnp.arange(0, half, dtype=jnp.float32) / half
+    return 1.0 / (theta**exponents)
+
+
+def _angles_standard(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (B, S) -> angles (B, S, head_dim/2)."""
+    inv = rope_frequencies(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv[None, None, :]
+
+
+def _angles_mrope(
+    positions: jax.Array, head_dim: int, theta: float, sections: Tuple[int, ...]
+) -> jax.Array:
+    """positions (B, 3, S) -> angles (B, S, head_dim/2) with per-section
+    position streams."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_frequencies(head_dim, theta)  # (half,)
+    # section id per frequency channel
+    sec_ids = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (half,)
+    # gather the right position stream per channel: (B, S, half)
+    pos = positions.astype(jnp.float32)  # (B, 3, S)
+    pos_per_channel = jnp.take(pos, sec_ids, axis=1)  # (B, half, S)
+    pos_per_channel = jnp.swapaxes(pos_per_channel, 1, 2)  # (B, S, half)
+    return pos_per_channel * inv[None, None, :]
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: Tuple[int, ...] = (),
+) -> jax.Array:
+    """Rotate x (B, S, N, head_dim) by position-dependent angles.
+
+    positions: (B, S) for RoPE, (B, 3, S) for M-RoPE (sections non-empty).
+    """
+    head_dim = x.shape[-1]
+    if sections:
+        ang = _angles_mrope(positions, head_dim, theta, sections)
+    else:
+        ang = _angles_standard(positions, head_dim, theta)
+    sin = jnp.sin(ang)[:, :, None, :]  # (B, S, 1, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0, mrope: bool = False) -> jax.Array:
+    """Sequential text positions; offset may be a traced scalar (decode)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset  # (1, S)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if mrope:
+        pos = jnp.broadcast_to(pos[:, None, :], (batch, 3, seq))
+    return pos

@@ -1,0 +1,327 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate connections).
+
+mLSTM train/prefill uses the stabilized parallel (quadratic) form — the
+decay matrix D_ts built from cumulative log-forget-gates plays the role of
+the attention matrix; decode uses the exact recurrent update on carried
+(C, n, m).  sLSTM is inherently sequential (h_{t-1} feeds the gates) and
+always runs as a `lax.scan` over time.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, rmsnorm, split_keys
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = cfg.xlstm_head_dim
+    ks = split_keys(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, h * dh), dtype),
+        "wv": dense_init(ks[2], (d, h * dh), dtype),
+        "wi": dense_init(ks[3], (d, h), dtype, scale=0.1),
+        "wf": dense_init(ks[4], (d, h), dtype, scale=0.1),
+        "f_bias": jnp.full((h,), 3.0, dtype),   # forget-gate open at init
+        "wo": dense_init(ks[5], (d, h * dh), dtype),
+        "w_out": dense_init(jax.random.fold_in(key, 99), (h * dh, d), dtype),
+        "norm_scale": jnp.zeros((h * dh,), dtype),
+    }
+
+
+def _mlstm_qkv(p: Params, x: jax.Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, h, dh) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    v = (x @ p["wv"]).reshape(b, s, h, dh)
+    i_pre = (x @ p["wi"]).astype(jnp.float32)                      # (B, S, H)
+    f_pre = (x @ p["wf"]).astype(jnp.float32) + p["f_bias"].astype(jnp.float32)
+    o_gate = jax.nn.sigmoid(x @ p["wo"]).reshape(b, s, h, dh)
+    return q, k, v, i_pre, f_pre, o_gate
+
+
+def mlstm_parallel(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Stabilized parallel form (training / prefill)."""
+    b, s, _ = x.shape
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    q, k, v, i_pre, f_pre, o_gate = _mlstm_qkv(p, x, cfg)
+
+    log_f = jax.nn.log_sigmoid(f_pre)                              # (B, S, H)
+    f_cum = jnp.cumsum(log_f, axis=1)                              # F_t
+    # D_ts = F_t - F_s + i_s   (s <= t)
+    d_mat = (
+        f_cum[:, :, None, :] - f_cum[:, None, :, :] + i_pre[:, None, :, :]
+    )  # (B, T, S, H)
+    t_idx = jnp.arange(s)
+    causal = t_idx[:, None] >= t_idx[None, :]
+    d_mat = jnp.where(causal[None, :, :, None], d_mat, NEG_INF)
+    m = jnp.max(d_mat, axis=2)                                     # (B, T, H)
+    decay = jnp.exp(d_mat - m[:, :, None, :])                      # (B, T, S, H)
+    decay = jnp.moveaxis(decay, 3, 1)                              # (B, H, T, S)
+
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    weights = scores * decay                                       # (B, H, T, S)
+    m_bht = jnp.moveaxis(m, 2, 1)                                  # (B, H, T)
+    norm = jnp.maximum(jnp.abs(weights.sum(axis=-1)), jnp.exp(-m_bht))
+    weights = weights / jnp.maximum(norm, 1e-6)[..., None]
+    h_out = jnp.einsum("bhts,bshd->bthd", weights, v.astype(jnp.float32))
+    h_out = h_out.astype(x.dtype) * o_gate
+    h_flat = h_out.reshape(b, s, h * dh)
+    h_flat = rmsnorm(h_flat, p["norm_scale"])
+    return h_flat @ p["w_out"]
+
+
+def mlstm_chunked(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Params]:
+    """Chunkwise-parallel mLSTM (GLA/mamba2-style): sequential scan over
+    chunks of ``cfg.scan_chunk`` positions carrying the recurrent (C, n, m)
+    state; quadratic work only within a chunk.
+
+    Replaces the fully-parallel form for long sequences: the (B, S, S, H)
+    decay matrix becomes (B, L, L, H) per chunk — for xlstm-350m x
+    prefill_32k this removes the TB-scale f32 intermediates (and their
+    collectives) that made the parallel form collective/memory-bound
+    (EXPERIMENTS.md §Perf hillclimb 2).
+    """
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    chunk = max(1, min(cfg.scan_chunk, s))
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, d)
+    # padded positions must not touch the state: f -> 1 (no decay), i -> -inf
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk)
+
+    if state is None:
+        state = init_mlstm_cache(b, cfg)
+
+    t_idx = jnp.arange(chunk)
+    causal = t_idx[:, None] >= t_idx[None, :]
+
+    def chunk_step(carry, inputs):
+        x_chunk, valid_c = inputs
+        c_in, n_in, m_in = carry["c"], carry["n"], carry["m"]
+        q, k, v, i_pre, f_pre, o_gate = _mlstm_qkv(p, x_chunk, cfg)
+        log_f = jax.nn.log_sigmoid(f_pre)                       # (B, L, H)
+        vmask = valid_c[None, :, None]                          # (1, L, 1)
+        log_f = jnp.where(vmask, log_f, 0.0)
+        i_pre = jnp.where(vmask, i_pre, NEG_INF)
+        f_cum = jnp.cumsum(log_f, axis=1)                       # F_t
+
+        # --- intra-chunk decay ---
+        d_intra = (
+            f_cum[:, :, None, :] - f_cum[:, None, :, :] + i_pre[:, None, :, :]
+        )
+        d_intra = jnp.where(causal[None, :, :, None], d_intra, NEG_INF)
+        m_intra = jnp.max(d_intra, axis=2)                      # (B, L, H)
+        m_cross = f_cum + m_in[:, None, :]                      # (B, L, H)
+        m_t = jnp.maximum(m_intra, m_cross)
+
+        w_intra = jnp.exp(d_intra - m_t[:, :, None, :])         # (B, T, S, H)
+        w_intra = jnp.moveaxis(w_intra, 3, 1)                   # (B, H, T, S)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+        intra = scores * w_intra
+
+        cross_scale = jnp.exp(m_cross - m_t)                    # (B, L, H)
+        qf = q.astype(jnp.float32)
+        num_cross = (
+            jnp.einsum("bhvk,bthk->bthv", c_in, qf) * cross_scale[..., None]
+        )
+        qn_cross = jnp.einsum("bhk,bthk->bth", n_in, qf) * cross_scale
+
+        row_sum = jnp.moveaxis(intra.sum(axis=-1), 1, 2)        # (B, T, H)
+        denom = jnp.maximum(jnp.abs(row_sum + qn_cross), jnp.exp(-m_t))
+        denom = jnp.maximum(denom, 1e-6)
+        h_intra = jnp.einsum("bhts,bshd->bthd", intra, v.astype(jnp.float32))
+        h_out = (h_intra + num_cross) / denom[..., None]
+        h_out = h_out.astype(x_chunk.dtype) * o_gate
+
+        # --- state update (closed form over the chunk) ---
+        f_total = f_cum[:, -1, :]                               # (B, H)
+        d_s = f_total[:, None, :] - f_cum + i_pre               # (B, L, H)
+        m_seq = jnp.max(d_s, axis=1)
+        m_old = f_total + m_in
+        m_new = jnp.maximum(m_seq, m_old)
+        w_s = jnp.exp(d_s - m_new[:, None, :])
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        c_seq = jnp.einsum("bsh,bshv,bshk->bhvk", w_s, vf, kf)
+        n_seq = jnp.einsum("bsh,bshk->bhk", w_s, kf)
+        old_scale = jnp.exp(m_old - m_new)
+        new_state = {
+            "c": old_scale[..., None, None] * c_in + c_seq,
+            "n": old_scale[..., None] * n_in + n_seq,
+            "m": m_new,
+        }
+        return new_state, h_out
+
+    final_state, hs = jax.lax.scan(
+        chunk_step, state, (jnp.swapaxes(xc, 0, 1), valid)
+    )
+    out = jnp.swapaxes(hs, 0, 1).reshape(b, nc * chunk, h * dh)[:, :s]
+    out = rmsnorm(out, p["norm_scale"])
+    return out @ p["w_out"], final_state
+
+
+def mlstm_final_state(
+    p: Params, x: jax.Array, cfg: ModelConfig, cache: Params
+) -> Params:
+    """Closed-form recurrent state after consuming x (prefill -> decode
+    handoff): C_S = Σ_s exp(F_S - F_s + i_s - m) v_s k_s^T, etc.  Starting
+    state (cache) is folded in with decay exp(F_S + m_old - m)."""
+    q, k, v, i_pre, f_pre, _ = _mlstm_qkv(p, x, cfg)
+    log_f = jax.nn.log_sigmoid(f_pre)                              # (B, S, H)
+    f_cum = jnp.cumsum(log_f, axis=1)
+    f_total = f_cum[:, -1, :]                                      # (B, H) = F_S
+    d_s = f_total[:, None, :] - f_cum + i_pre                      # (B, S, H)
+    m_seq = jnp.max(d_s, axis=1)                                   # (B, H)
+    m_old = f_total + cache["m"]
+    m_new = jnp.maximum(m_seq, m_old)
+    w = jnp.exp(d_s - m_new[:, None, :])                           # (B, S, H)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_seq = jnp.einsum("bsh,bshv,bshk->bhvk", w, vf, kf)
+    n_seq = jnp.einsum("bsh,bshk->bhk", w, kf)
+    old_scale = jnp.exp(m_old - m_new)
+    c_new = old_scale[..., None, None] * cache["c"] + c_seq
+    n_new = old_scale[..., None] * cache["n"] + n_seq
+    return {"c": c_new, "n": n_new, "m": m_new}
+
+
+def init_mlstm_cache(batch: int, cfg: ModelConfig) -> Params:
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), NEG_INF, jnp.float32),
+    }
+
+
+def mlstm_step(
+    p: Params, x: jax.Array, cfg: ModelConfig, cache: Params
+) -> Tuple[jax.Array, Params]:
+    """Recurrent decode update. x: (B, 1, d)."""
+    b = x.shape[0]
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    q, k, v, i_pre, f_pre, o_gate = _mlstm_qkv(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                            # (B, H, dh)
+    i_pre, f_pre, o_gate = i_pre[:, 0], f_pre[:, 0], o_gate[:, 0]
+
+    log_f = jax.nn.log_sigmoid(f_pre)                              # (B, H)
+    m_new = jnp.maximum(log_f + cache["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + cache["m"] - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_new = f_g[..., None, None] * cache["c"] + i_g[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )  # (B, H, dh_v, dh_k)
+    n_new = f_g[..., None] * cache["n"] + i_g[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qf)
+    qn = jnp.einsum("bhk,bhk->bh", n_new, qf)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new)) + 1e-6
+    h_out = (num / denom[..., None]).astype(x.dtype) * o_gate
+    h_flat = rmsnorm(h_out.reshape(b, 1, h * dh), p["norm_scale"])
+    return h_flat @ p["w_out"], {"c": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = cfg.xlstm_head_dim
+    ks = split_keys(key, 8)
+    return {
+        "wz": dense_init(ks[0], (d, h * dh), dtype),
+        "wi": dense_init(ks[1], (d, h * dh), dtype, scale=0.1),
+        "wf": dense_init(ks[2], (d, h * dh), dtype, scale=0.1),
+        "wo": dense_init(ks[3], (d, h * dh), dtype),
+        "rz": dense_init(ks[4], (h, dh, dh), dtype, scale=0.5),
+        "ri": dense_init(ks[5], (h, dh, dh), dtype, scale=0.5),
+        "rf": dense_init(ks[6], (h, dh, dh), dtype, scale=0.5),
+        "ro": dense_init(ks[7], (h, dh, dh), dtype, scale=0.5),
+        "f_bias": jnp.full((h * dh,), 3.0, dtype),
+        "w_out": dense_init(jax.random.fold_in(key, 99), (h * dh, d), dtype),
+        "norm_scale": jnp.zeros((h * dh,), dtype),
+    }
+
+
+def init_slstm_cache(batch: int, cfg: ModelConfig) -> Params:
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, dh), NEG_INF, jnp.float32), "h": z}
+
+
+def _slstm_cell(p: Params, cfg: ModelConfig, x_t: jax.Array, state: Params):
+    """One sLSTM step. x_t: (B, d) pre-projected gate inputs supplied here."""
+    b = x_t.shape[0]
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    h_prev = state["h"]                                            # (B, H, dh) f32
+
+    def rec(w, hp):  # block-diagonal recurrent matmul
+        return jnp.einsum("bhk,hkv->bhv", hp, w.astype(jnp.float32))
+
+    xz = (x_t @ p["wz"]).reshape(b, h, dh).astype(jnp.float32)
+    xi = (x_t @ p["wi"]).reshape(b, h, dh).astype(jnp.float32)
+    xf = ((x_t @ p["wf"]) + p["f_bias"]).reshape(b, h, dh).astype(jnp.float32)
+    xo = (x_t @ p["wo"]).reshape(b, h, dh).astype(jnp.float32)
+
+    z = jnp.tanh(xz + rec(p["rz"], h_prev))
+    i_pre = xi + rec(p["ri"], h_prev)
+    f_pre = xf + rec(p["rf"], h_prev)
+    o = jax.nn.sigmoid(xo + rec(p["ro"], h_prev))
+
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_g * state["c"] + i_g * z
+    n_new = f_g * state["n"] + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_forward(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Sequential over time for any S; decode is just S == 1."""
+    b, s, _ = x.shape
+    h, dh = cfg.num_heads, cfg.xlstm_head_dim
+    state = cache if cache is not None else init_slstm_cache(b, cfg)
+
+    def step(st, x_t):
+        st2 = _slstm_cell(p, cfg, x_t, st)
+        return st2, st2["h"]
+
+    state_f, hs = jax.lax.scan(step, state, jnp.swapaxes(x, 0, 1))
+    out = jnp.swapaxes(hs, 0, 1).astype(x.dtype).reshape(b, s, h * dh)
+    out = rmsnorm(out, p["norm_scale"])
+    return out @ p["w_out"], (state_f if cache is not None else None)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (multipliers on the base lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup_steps)
+        prog = jnp.clip(
+            (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn
+
+
+def warmup_linear(warmup_steps: int, total_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup_steps)
+        decay = jnp.clip(
+            1.0 - (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+            0.0,
+            1.0,
+        )
+        return jnp.where(s < warmup_steps, warm, decay)
+
+    return fn

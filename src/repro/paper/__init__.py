@@ -1,0 +1,1 @@
+"""Faithful reproduction harness for the paper's own experiments (§IV)."""

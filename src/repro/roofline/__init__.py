@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineReport,
+    analyze,
+    collective_bytes,
+    model_flops,
+)

@@ -1,0 +1,180 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute term    = FLOPs            / (chips * peak_FLOP/s)
+    memory term     = HBM bytes        / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Collective bytes come from the optimized HLO text with while-loop bodies
+multiplied by their trip counts (hlo_parse.py) — XLA's cost_analysis counts
+a scanned layer stack's body once, which would undercount by the unit count.
+For the same reason the compute/memory terms use the analytic program model
+(analytic.py); the raw cost_analysis numbers are retained in the report for
+reference.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.roofline import analytic as analytic_lib
+from repro.roofline import hlo_parse
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+
+collective_bytes = hlo_parse.collective_bytes_with_trip_counts
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs accounting (6*N*D with N = active params)
+# ---------------------------------------------------------------------------
+
+def count_params(shapes_tree: Any) -> int:
+    return sum(
+        int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(shapes_tree)
+    )
+
+
+def active_params(cfg, params_shapes: Any) -> int:
+    """Total params with MoE expert tensors scaled by top_k/E — the
+    per-token active parameter count used for MODEL_FLOPS of MoE archs."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]:
+        names = [
+            str(k.key) if isinstance(k, jax.tree_util.DictKey) else ""
+            for k in path
+        ]
+        n = int(np.prod(leaf.shape))
+        is_expert = (
+            cfg.num_experts > 0
+            and "ffn" in names
+            and names[-1] in ("w_up", "w_gate", "w_down")
+            and len(leaf.shape) >= 3
+            and cfg.num_experts in leaf.shape
+        )
+        if is_expert:
+            n = int(n * cfg.top_k / cfg.num_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg, params_shapes: Any, tokens: int, decode: bool,
+                kind: str = "") -> float:
+    """6*N_active*D (training) or 2*N_active*D (single forward: prefill or
+    decode)."""
+    n = active_params(cfg, params_shapes)
+    mult = 6.0 if (kind or ("decode" if decode else "train")) == "train" else 2.0
+    return mult * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                      # analytic, global
+    hbm_bytes: float                  # analytic, global
+    coll_bytes: float                 # HLO, trip-count-aware, per device
+    coll_breakdown: Dict[str, float]
+    model_flops_: float
+    raw_cost_flops: float = 0.0       # cost_analysis (body-once; reference)
+    raw_cost_bytes: float = 0.0
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # coll_bytes is per-device traffic (SPMD module is per-device).
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops_ / max(self.flops, 1.0)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "collective_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops_,
+            "raw_cost_flops": self.raw_cost_flops,
+            "raw_cost_bytes": self.raw_cost_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    cfg,
+    shape_cfg,
+    params_shapes,
+    tokens: int,
+    decode: bool,
+    bytes_per_device: Optional[float] = None,
+) -> RooflineReport:
+    coll_total, coll_breakdown = hlo_parse.collective_bytes_with_trip_counts(
+        hlo_text
+    )
+    n_params = count_params(params_shapes)
+    n_active = active_params(cfg, params_shapes)
+    ana = analytic_lib.analytic_cost(cfg, shape_cfg, n_params, n_active)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops=ana["flops"],
+        hbm_bytes=ana["hbm_bytes"],
+        coll_bytes=coll_total,
+        coll_breakdown=coll_breakdown,
+        model_flops_=model_flops(cfg, params_shapes, tokens, decode,
+                                 kind=shape_cfg.kind),
+        raw_cost_flops=float(cost.get("flops", 0.0)),
+        raw_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        bytes_per_device=bytes_per_device,
+    )

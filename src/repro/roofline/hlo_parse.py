@@ -1,0 +1,124 @@
+"""Trip-count-aware collective accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` (and a naive line scan of the HLO) counts
+a ``while`` body ONCE, but a scanned layer stack executes its body U times —
+so collectives inside the unit scan would be undercounted by U.  This module
+walks the computation graph: per-computation collective bytes, then a
+recursive evaluation from ENTRY where each ``while`` multiplies its body cost
+by the loop trip count (read from the largest integer constant in the
+condition computation — exact for counting loops produced by lax.scan /
+fori_loop).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_WHILE_RE = re.compile(r"=\s*.*?\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\b[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry_alias = None
+    for line in hlo.splitlines():
+        m = _COMP_START_RE.match(line.strip()) if "{" in line else None
+        if m and "->" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry_alias = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry_alias is not None:
+        comps["__ENTRY__"] = comps[entry_alias]
+    return comps
+
+
+def collective_bytes_with_trip_counts(hlo: str) -> Tuple[float, Dict[str, float]]:
+    """Returns (total_bytes, per-kind breakdown) with while bodies multiplied
+    by their trip counts."""
+    comps = _split_computations(hlo)
+
+    own: Dict[str, Dict[str, int]] = {}
+    whiles: Dict[str, List[Tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        per_kind = {k: 0 for k in _COLLECTIVES}
+        wl = []
+        for line in lines:
+            if "-done(" in line:
+                continue
+            cm = _COLL_RE.search(line)
+            if cm:
+                per_kind[cm.group(2)] += _shape_bytes(cm.group(1))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                wl.append((wm.group(1), wm.group(2)))
+        own[name] = per_kind
+        whiles[name] = wl
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in own:
+            return {k: 0.0 for k in _COLLECTIVES}
+        acc = {k: float(v) for k, v in own[name].items()}
+        for cond, body in whiles[name]:
+            tc = trip_count(cond)
+            sub = total(body, stack + (name,))
+            for k in acc:
+                acc[k] += tc * sub[k]
+        memo[name] = acc
+        return acc
+
+    entry = "__ENTRY__" if "__ENTRY__" in comps else next(iter(comps), None)
+    if entry is None:
+        return 0.0, {k: 0.0 for k in _COLLECTIVES}
+    breakdown = total(entry)
+    return sum(breakdown.values()), breakdown

@@ -1,0 +1,9 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_spec,
+    cache_pspecs,
+    data_axes,
+    opt_state_pspecs,
+    param_pspecs,
+    to_shardings,
+    token_pspec,
+)

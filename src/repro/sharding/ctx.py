@@ -1,0 +1,37 @@
+"""Trace-time mesh context for modules that opt into explicit shard_map
+formulations (currently the MoE layer).
+
+The step functions built in launch/steps.py activate this context around the
+model forward; layers query it at trace time.  When no mesh is active (CPU
+unit tests, reduced smoke models) layers fall back to their pure-GSPMD
+formulations.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+_MOE_MESH: ContextVar[Optional[Mesh]] = ContextVar("repro_moe_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_shard_map_mesh(mesh: Optional[Mesh]):
+    token = _MOE_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MOE_MESH.reset(token)
+
+
+def shard_map_mesh() -> Optional[Mesh]:
+    return _MOE_MESH.get()
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """(data-like axes, model axis)."""
+    data = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return data, "model"

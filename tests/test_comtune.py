@@ -1,0 +1,138 @@
+"""COMtune core behaviour (paper §III-C/D): dropout emulates the channel,
+and fine-tuning with it buys packet-loss robustness (the paper's headline
+claim, on a tiny task)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comtune
+from repro.core.compression import Compressor
+
+
+class TestLinkLayers:
+    def test_dropout_matches_channel_distribution(self):
+        """Eq. 7 vs Eq. 1+11: same keep-rate and same compensation scale."""
+        x = jnp.ones((100_000,))
+        key = jax.random.PRNGKey(0)
+        d = comtune.dropout_link(key, x, 0.4)
+        spec = comtune.LinkSpec(loss_rate=0.4)
+        c = comtune.channel_link(jax.random.PRNGKey(1), x, spec)
+        # nonzero values are identical (1/(1-p)); keep rates agree
+        assert abs(float((d != 0).mean()) - 0.6) < 0.01
+        assert abs(float((c != 0).mean()) - 0.6) < 0.01
+        np.testing.assert_allclose(
+            np.unique(np.asarray(d))[-1], 1 / 0.6, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.unique(np.asarray(c))[-1], 1 / 0.6, rtol=1e-5
+        )
+
+    def test_dropout_zero_rate_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32,))
+        assert comtune.dropout_link(jax.random.PRNGKey(1), x, 0.0) is x
+
+    def test_adaptive_compensation_unbiased_per_message(self):
+        x = jnp.ones((10_000,))
+        spec = comtune.LinkSpec(loss_rate=0.5, adaptive_compensation=True)
+        y = comtune.channel_link(jax.random.PRNGKey(0), x, spec)
+        # adaptive compensation renormalizes by the realized keep fraction
+        assert abs(float(y.mean()) - 1.0) < 1e-3
+
+    def test_latency_accounting(self):
+        from repro.core.link import ChannelConfig
+
+        spec = comtune.LinkSpec(compressor=Compressor())
+        ch = ChannelConfig()
+        # paper §IV-A: 65.5 kB at 9 Mbit/s -> 58.2 ms
+        lat = comtune.di_latency_s(spec, 16384, 1, ch)
+        assert abs(lat - 0.0582) < 0.001
+
+
+class TestEndToEndRobustness:
+    """The paper's core claim on a tiny synthetic task: a model fine-tuned
+    with the dropout link layer (COMtune) degrades less under packet loss
+    than one fine-tuned without it ('previous DI')."""
+
+    @pytest.fixture(scope="class")
+    def trained_models(self):
+        import repro.data as data
+        from repro.models import cnn
+        from repro.optim import AdamConfig, adam_update, init_adam
+
+        cfg = cnn.CNNConfig(
+            blocks=((1, 16), (1, 32)), fc=(32,), num_classes=10,
+            image_size=16, split_block=1,
+        )
+        (xtr, ytr), (xte, yte) = data.make_image_dataset(
+            n_train=1500, n_test=400, num_classes=10, image_size=16, noise=1.2
+        )
+        adam_cfg = AdamConfig(lr=2e-3)
+
+        def train(dropout_rate, seed=0):
+            key = jax.random.PRNGKey(seed)
+            params, state = cnn.init_cnn(key, cfg)
+            opt = init_adam(params, adam_cfg)
+            it = data.batch_iterator(xtr, ytr, 64, seed=seed)
+
+            @jax.jit
+            def step(params, state, opt, xb, yb, k):
+                def loss_fn(p):
+                    link = (
+                        (lambda a: comtune.dropout_link(k, a, dropout_rate))
+                        if dropout_rate > 0
+                        else None
+                    )
+                    logits, new_state = cnn.forward(
+                        p, state, xb, cfg, train=True, link_fn=link
+                    )
+                    ll = jax.nn.log_softmax(logits)
+                    return -jnp.take_along_axis(
+                        ll, yb[:, None], axis=-1
+                    ).mean(), new_state
+
+                (l, new_state), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+                params, opt, _ = adam_update(g, params, opt, adam_cfg)
+                return params, new_state, opt, l
+
+            for i in range(200):
+                xb, yb = next(it)
+                key, sub = jax.random.split(key)
+                params, state, opt, _ = step(
+                    params, state, opt, jnp.asarray(xb), jnp.asarray(yb), sub
+                )
+            return params, state
+
+        return cfg, train(0.0), train(0.5), (xte, yte)
+
+    def _accuracy(self, cfg, params, state, xte, yte, loss_rate, seed=0):
+        from repro.models import cnn
+
+        key = jax.random.PRNGKey(seed)
+        link = (
+            (lambda a: comtune.channel_link(
+                key, a, comtune.LinkSpec(loss_rate=loss_rate)))
+            if loss_rate > 0
+            else None
+        )
+        logits, _ = cnn.forward(
+            params, state, jnp.asarray(xte), cfg, train=False, link_fn=link
+        )
+        return float((jnp.argmax(logits, -1) == jnp.asarray(yte)).mean())
+
+    def test_comtune_beats_baseline_under_loss(self, trained_models):
+        cfg, (p0, s0), (p5, s5), (xte, yte) = trained_models
+        accs0 = np.mean([self._accuracy(cfg, p0, s0, xte, yte, 0.7, s) for s in range(3)])
+        accs5 = np.mean([self._accuracy(cfg, p5, s5, xte, yte, 0.7, s) for s in range(3)])
+        # paper Fig. 5: at high loss rates COMtune is clearly better
+        assert accs5 > accs0 + 0.03, (accs0, accs5)
+
+    def test_comtune_degrades_gracefully(self, trained_models):
+        cfg, _, (p5, s5), (xte, yte) = trained_models
+        clean = self._accuracy(cfg, p5, s5, xte, yte, 0.0)
+        lossy = np.mean(
+            [self._accuracy(cfg, p5, s5, xte, yte, 0.5, s) for s in range(3)]
+        )
+        assert clean > 0.8  # learned the task
+        assert clean - lossy < 0.1  # small degradation at p=0.5 (Fig. 5)

@@ -1,0 +1,125 @@
+"""Decode-path integration: prefill + single-token decode must match the
+full forward pass for every architecture family (KV caches, rotating
+windows, SSM/xLSTM states, MoE with drop-free capacity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.models import cache as cache_lib, lm
+
+# High capacity factor so MoE capacity-dropping (a routing function of the
+# token count) doesn't make full-vs-incremental genuinely differ.
+CASES = [
+    ("qwen1.5-0.5b", {}),
+    ("codeqwen1.5-7b", {}),
+    ("gemma-7b", {}),
+    ("gemma3-12b", {}),                      # rotating sliding-window caches
+    ("qwen2-vl-72b", {}),                    # M-RoPE
+    ("musicgen-medium", {}),
+    ("kimi-k2-1t-a32b", {"capacity_factor": 16.0}),
+    ("arctic-480b", {"capacity_factor": 16.0}),
+    ("jamba-v0.1-52b", {"capacity_factor": 16.0}),   # mamba states
+    ("xlstm-350m", {}),                      # mLSTM closed-form state handoff
+]
+
+
+@pytest.mark.parametrize("arch,overrides", CASES)
+def test_prefill_plus_decode_matches_full(arch, overrides):
+    cfg = ARCHITECTURES[arch].reduced(**overrides)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    full_logits, _, _ = lm.forward(params, toks, cfg, link_mode="off", mode="prefill")
+
+    cache = cache_lib.init_cache(cfg, B, max_seq=32)
+    _, cache, _ = lm.forward(
+        params, toks[:, : S - 1], cfg, cache=cache, cache_index=0,
+        link_mode="off", mode="prefill",
+    )
+    dec_logits, cache, _ = lm.forward(
+        params, toks[:, S - 1 :], cfg, cache=cache, cache_index=S - 1,
+        link_mode="off", mode="decode",
+    )
+    a = np.asarray(full_logits[:, -1])
+    b = np.asarray(dec_logits[:, 0])
+    np.testing.assert_allclose(a, b, atol=5e-4 * max(1.0, np.abs(a).max()))
+
+
+def test_multi_step_decode_consistency():
+    """Decode 4 tokens step-by-step == full forward on the whole sequence."""
+    cfg = ARCHITECTURES["gemma3-12b"].reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S, T = 2, 8, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + T), 0, cfg.vocab_size)
+
+    full_logits, _, _ = lm.forward(
+        params, toks, cfg, link_mode="off", mode="prefill"
+    )
+
+    cache = cache_lib.init_cache(cfg, B, max_seq=64)
+    _, cache, _ = lm.forward(
+        params, toks[:, :S], cfg, cache=cache, cache_index=0,
+        link_mode="off", mode="prefill",
+    )
+    for i in range(T):
+        dec_logits, cache, _ = lm.forward(
+            params, toks[:, S + i : S + i + 1], cfg, cache=cache,
+            cache_index=S + i, link_mode="off", mode="decode",
+        )
+        a = np.asarray(full_logits[:, S + i])
+        b = np.asarray(dec_logits[:, 0])
+        np.testing.assert_allclose(a, b, atol=5e-4 * max(1.0, np.abs(a).max()))
+
+
+def test_rotating_window_cache_beyond_window():
+    """Decoding past the window length must match the full windowed forward
+    (the rotating buffer drops exactly the out-of-window entries)."""
+    from repro.configs.base import LayerSpec
+
+    cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(
+        unit_pattern=(LayerSpec(kind="attn", window=8),),
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 20  # well past the window of 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = lm.forward(params, toks, cfg, link_mode="off", mode="prefill")
+
+    cache = cache_lib.init_cache(cfg, B, max_seq=S)
+    _, cache, _ = lm.forward(
+        params, toks[:, : S - 3], cfg, cache=cache, cache_index=0,
+        link_mode="off", mode="prefill",
+    )
+    for i in range(S - 3, S):
+        dec_logits, cache, _ = lm.forward(
+            params, toks[:, i : i + 1], cfg, cache=cache, cache_index=i,
+            link_mode="off", mode="decode",
+        )
+        a = np.asarray(full_logits[:, i])
+        b = np.asarray(dec_logits[:, 0])
+        np.testing.assert_allclose(a, b, atol=5e-4 * max(1.0, np.abs(a).max()))
+
+
+def test_serve_step_with_lossy_link_stays_finite():
+    """The DI serve path (Eq. 12) with aggressive loss must stay numerically
+    sane (compensation keeps activations in range)."""
+    cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = cache_lib.init_cache(cfg, B, max_seq=16)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+    _, cache, _ = lm.forward(
+        params, toks, cfg, cache=cache, cache_index=0,
+        link_key=jax.random.PRNGKey(2), link_mode="serve", loss_rate=0.7,
+        mode="prefill",
+    )
+    tok = toks[:, -1:]
+    logits, cache, _ = lm.forward(
+        params, tok, cfg, cache=cache, cache_index=8,
+        link_key=jax.random.PRNGKey(3), link_mode="serve", loss_rate=0.7,
+        mode="decode",
+    )
+    assert bool(jnp.isfinite(logits).all())

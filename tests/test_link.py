@@ -1,0 +1,97 @@
+"""Channel model tests (paper Eq. 1-5) incl. hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import link
+
+
+class TestMasks:
+    def test_element_mask_rate(self):
+        m = link.element_loss_mask(jax.random.PRNGKey(0), (200_000,), 0.3)
+        assert abs(float(m.mean()) - 0.7) < 0.01
+
+    def test_packet_mask_rate_with_shuffle(self):
+        fr = [
+            float(link.packet_loss_mask(jax.random.PRNGKey(i), 50_000, 0.4, 25).mean())
+            for i in range(10)
+        ]
+        assert abs(np.mean(fr) - 0.6) < 0.02
+
+    def test_packet_mask_burst_without_shuffle(self):
+        """Without the paper's shuffle, losses are bursts of whole packets."""
+        m = np.asarray(
+            link.packet_loss_mask(
+                jax.random.PRNGKey(0), 1000, 0.5, 25, shuffle=False
+            )
+        )
+        blocks = m.reshape(-1, 25)
+        # every 25-element packet is entirely kept or entirely dropped
+        assert np.all((blocks.sum(axis=1) == 0) | (blocks.sum(axis=1) == 25))
+
+    def test_zero_loss_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (64,))
+        y = link.apply_channel(jax.random.PRNGKey(0), x, 0.0)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        p=st.floats(0.05, 0.9),
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(100, 5000),
+    )
+    def test_compensation_unbiased_property(self, p, seed, n):
+        """E[f_c(x|p)/(1-p)] == x  (the paper's Eq. 11 compensation)."""
+        x = jnp.ones((n,))
+        y = link.apply_channel(jax.random.PRNGKey(seed), x, p, compensate=True)
+        # mean of compensated mask ~ 1 with std sqrt(p/(1-p)/n)
+        tol = 6.0 * np.sqrt(p / (1 - p) / n)
+        assert abs(float(y.mean()) - 1.0) < tol
+
+    @settings(deadline=None, max_examples=20)
+    @given(p=st.floats(0.0, 0.95), seed=st.integers(0, 1000))
+    def test_mask_is_binary_and_shape_preserving(self, p, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (17, 13))
+        y = link.apply_channel(jax.random.PRNGKey(seed + 1), x, p, compensate=False)
+        assert y.shape == x.shape
+        kept = np.asarray(y) != 0
+        np.testing.assert_allclose(
+            np.asarray(y)[kept], np.asarray(x)[kept], rtol=1e-6
+        )
+
+
+class TestLatencyModel:
+    def test_received_pmf_normalizes_and_mean(self):
+        pmf = link.received_packets_pmf(200, 0.3)
+        assert abs(pmf.sum() - 1.0) < 1e-9
+        mean = (np.arange(201) * pmf).sum()
+        assert abs(mean - 0.7 * 200) < 1e-6
+
+    def test_reliable_latency_mean_matches_negative_binomial(self):
+        cfg = link.ChannelConfig(loss_rate=0.5)
+        lat, pmf = link.reliable_latency_pmf(100, cfg)
+        mean_slots = (lat / cfg.slot_time_s() * pmf).sum()
+        assert abs(mean_slots - 100 / 0.5) < 0.5
+
+    def test_unreliable_latency_deterministic(self):
+        cfg = link.ChannelConfig(loss_rate=0.9)
+        # no retransmission: latency independent of loss rate
+        assert link.unreliable_latency_s(100, cfg) == 100 * cfg.slot_time_s()
+
+    def test_reliable_slower_than_unreliable(self):
+        """Paper Fig. 4a: reliable protocol latency stochastically dominates."""
+        cfg = link.ChannelConfig(loss_rate=0.5)
+        n_t = 655  # 65.5 kB / 100 B
+        unrel = link.unreliable_latency_s(n_t, cfg)
+        lat, pmf = link.reliable_latency_pmf(n_t, cfg)
+        mean_rel = (lat * pmf).sum()
+        assert mean_rel > 1.9 * unrel  # ~2x at p=0.5
+
+    def test_gammaln_accuracy(self):
+        import math
+
+        for x in [1.0, 2.5, 10.0, 100.5, 1000.0]:
+            assert abs(link._gammaln(np.array(x)) - math.lgamma(x)) < 1e-8

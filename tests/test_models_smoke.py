@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: REDUCED variant (2 units, d_model<=256,
+<=4 experts) of each assigned config — one forward + one train step on CPU,
+asserting output shapes and no NaNs.  The FULL configs are exercised only by
+launch/dryrun.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.optim import AdamConfig, init_adam
+
+ARCHS = sorted(ARCHITECTURES)
+
+
+def _batch(cfg, b=2, s=16, seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend:
+        batch["frontend_embed"] = jnp.ones((b, cfg.frontend_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_and_finiteness(arch):
+    cfg = ARCHITECTURES[arch].reduced()
+    assert cfg.d_model <= 256 and cfg.resolved_num_units == 2
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, _, aux = lm.forward(
+        params,
+        batch["tokens"],
+        cfg,
+        frontend_embed=batch.get("frontend_embed"),
+        link_key=jax.random.PRNGKey(2),
+        link_mode="train",
+        mode="train",
+    )
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = ARCHITECTURES[arch].reduced()
+    adam_cfg = AdamConfig(lr=1e-3, grad_clip_norm=1.0)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    opt = init_adam(params, adam_cfg)
+    step = jax.jit(make_train_step(cfg, adam_cfg))
+    batch = _batch(cfg)
+    new_params, new_opt, metrics = step(params, opt, batch, jax.random.PRNGKey(3))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    # params actually changed
+    delta = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.abs(l).sum()),
+        jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            new_params, params,
+        ),
+        0.0,
+    )
+    assert delta > 0.0
+    assert int(new_opt.step) == 1
+
+
+def test_all_ten_assigned_archs_present():
+    kinds = {ARCHITECTURES[a].arch_type for a in ARCHS}
+    assert len(ARCHS) == 10
+    assert kinds == {"dense", "moe", "hybrid", "vlm", "audio", "ssm"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config fields must be exactly the assigned values."""
+    expected = {
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    }[arch]
+    c = ARCHITECTURES[arch]
+    got = (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size)
+    assert got == expected
+    moe = {
+        "jamba-v0.1-52b": (16, 2),
+        "kimi-k2-1t-a32b": (384, 8),
+        "arctic-480b": (128, 2),
+    }.get(arch)
+    if moe:
+        assert (c.num_experts, c.top_k) == moe

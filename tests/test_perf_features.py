@@ -1,0 +1,183 @@
+"""Tests for the §Perf optimization features: shard_map MoE, chunked mLSTM,
+int8 KV cache, sharded-vocab-safe loss, attention sharding constraints."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.models import cache as cache_lib, lm, moe, xlstm
+from repro.sharding import ctx as shard_ctx
+
+
+class TestShardMapMoE:
+    @pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "arctic-480b", "jamba-v0.1-52b"])
+    def test_matches_dense_path(self, arch):
+        cfg = ARCHITECTURES[arch].reduced(capacity_factor=16.0)
+        p = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.5
+        out_d, aux_d = moe.moe_forward_dense(p, x, cfg)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        out_s, aux_s = moe.moe_forward_shard_map(p, x, cfg, mesh)
+        np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_s), atol=1e-5)
+        np.testing.assert_allclose(float(aux_d), float(aux_s), rtol=1e-5)
+
+    def test_dispatcher_uses_ctx(self):
+        cfg = ARCHITECTURES["arctic-480b"].reduced(capacity_factor=16.0)
+        p = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        out_plain, _ = moe.moe_forward(p, x, cfg)
+        with shard_ctx.use_shard_map_mesh(mesh):
+            out_ctx, _ = moe.moe_forward(p, x, cfg)
+        np.testing.assert_allclose(
+            np.asarray(out_plain), np.asarray(out_ctx), atol=1e-5
+        )
+
+    def test_gradients_flow(self):
+        cfg = ARCHITECTURES["kimi-k2-1t-a32b"].reduced(capacity_factor=16.0)
+        p = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+        def loss(p):
+            o, a = moe.moe_forward_shard_map(p, x, cfg, mesh)
+            return (o**2).mean() + 0.01 * a
+
+        g = jax.grad(loss)(p)
+        leaves = jax.tree_util.tree_leaves(g)
+        assert all(bool(jnp.isfinite(l).all()) for l in leaves)
+        assert float(sum(jnp.abs(l).sum() for l in leaves)) > 0
+
+
+class TestChunkedMLSTM:
+    def test_matches_parallel(self):
+        cfg = ARCHITECTURES["xlstm-350m"].reduced()
+        p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, cfg.d_model)) * 0.5
+        y_par = xlstm.mlstm_parallel(p, x, cfg)
+        y_chk, _ = xlstm.mlstm_chunked(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_chk), atol=1e-5)
+
+    def test_state_matches_sequential_steps(self):
+        cfg = ARCHITECTURES["xlstm-350m"].reduced()
+        p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+        B, S = 2, 37  # non-multiple of chunk: exercises padding masking
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+        _, st = xlstm.mlstm_chunked(p, x, cfg)
+        st_seq = xlstm.init_mlstm_cache(B, cfg)
+        for t in range(S):
+            _, st_seq = xlstm.mlstm_step(p, x[:, t : t + 1], cfg, st_seq)
+        for k in ("c", "n", "m"):
+            np.testing.assert_allclose(
+                np.asarray(st[k]), np.asarray(st_seq[k]), atol=1e-4
+            )
+
+    def test_prefill_decode_handoff(self):
+        cfg = ARCHITECTURES["xlstm-350m"].reduced()
+        p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+        B, S = 1, 33
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+        y_full = xlstm.mlstm_parallel(p, x, cfg)
+        _, st = xlstm.mlstm_chunked(p, x[:, : S - 1], cfg)
+        y_dec, _ = xlstm.mlstm_step(p, x[:, S - 1 :], cfg, st)
+        np.testing.assert_allclose(
+            np.asarray(y_full[:, -1]), np.asarray(y_dec[:, 0]), atol=1e-4
+        )
+
+    def test_continuation_state(self):
+        """chunked(x1) state feeding chunked(x2) == chunked(x1 ++ x2)."""
+        cfg = ARCHITECTURES["xlstm-350m"].reduced()
+        p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 48, cfg.d_model)) * 0.5
+        y_all, st_all = xlstm.mlstm_chunked(p, x, cfg)
+        _, st1 = xlstm.mlstm_chunked(p, x[:, :20], cfg)
+        y2, st2 = xlstm.mlstm_chunked(p, x[:, 20:], cfg, state=st1)
+        np.testing.assert_allclose(
+            np.asarray(y_all[:, 20:]), np.asarray(y2), atol=1e-4
+        )
+        for k in ("c", "n", "m"):
+            np.testing.assert_allclose(
+                np.asarray(st_all[k]), np.asarray(st2[k]), atol=1e-4
+            )
+
+
+class TestInt8KVCache:
+    def test_decode_close_to_fp_cache(self):
+        cfg8 = ARCHITECTURES["qwen1.5-0.5b"].reduced(kv_cache_dtype="int8")
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg8)
+        B, S = 2, 12
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg8.vocab_size)
+        full, _, _ = lm.forward(params, toks, cfg8, link_mode="off", mode="prefill")
+        c = cache_lib.init_cache(cfg8, B, max_seq=32)
+        assert c["units"][0]["k"].dtype == jnp.int8
+        assert "k_scale" in c["units"][0]
+        _, c, _ = lm.forward(
+            params, toks[:, : S - 1], cfg8, cache=c, cache_index=0,
+            link_mode="off", mode="prefill",
+        )
+        dec, _, _ = lm.forward(
+            params, toks[:, S - 1 :], cfg8, cache=c, cache_index=S - 1,
+            link_mode="off", mode="decode",
+        )
+        a = np.asarray(full[:, -1])
+        b = np.asarray(dec[:, 0])
+        rel = np.abs(a - b).max() / np.abs(a).max()
+        assert rel < 0.05  # int8 rounding only
+        assert (a.argmax(-1) == b.argmax(-1)).all()
+
+    def test_int8_with_rotating_window(self):
+        from repro.configs.base import LayerSpec
+
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(
+            kv_cache_dtype="int8",
+            unit_pattern=(LayerSpec(kind="attn", window=8),),
+        )
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        B, S = 1, 20
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        full, _, _ = lm.forward(params, toks, cfg, link_mode="off", mode="prefill")
+        c = cache_lib.init_cache(cfg, B, max_seq=S)
+        _, c, _ = lm.forward(
+            params, toks[:, : S - 1], cfg, cache=c, cache_index=0,
+            link_mode="off", mode="prefill",
+        )
+        dec, _, _ = lm.forward(
+            params, toks[:, S - 1 :], cfg, cache=c, cache_index=S - 1,
+            link_mode="off", mode="decode",
+        )
+        a = np.asarray(full[:, -1])
+        b = np.asarray(dec[:, 0])
+        assert np.abs(a - b).max() / np.abs(a).max() < 0.05
+
+    def test_quantize_roundtrip_bound(self):
+        from repro.models.attention import _dequantize_kv, _quantize_kv
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 7, 3, 64)) * 3
+        q, s = _quantize_kv(x)
+        xr = _dequantize_kv(q, s, jnp.float32)
+        # rounding error <= scale/2, plus bf16 storage of the scale adds up
+        # to 2^-8 relative error amplified by |code| <= 127
+        bound = np.asarray(s, np.float32)[..., None] * (0.5 + 127 / 256.0) + 1e-6
+        assert np.all(np.abs(np.asarray(xr - x)) <= bound)
+
+
+class TestShardedVocabLoss:
+    def test_matches_naive_cross_entropy(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (2, 10, 37))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 37)
+        ours = lm.lm_loss(logits, toks, jnp.zeros(()), 0.0)
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        ref = -jnp.take_along_axis(lp, toks[:, 1:, None], axis=-1).mean()
+        np.testing.assert_allclose(float(ours), float(ref), rtol=1e-6)
+
+    def test_gradient_matches(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 11))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 11)
+        g1 = jax.grad(lambda l: lm.lm_loss(l, toks, jnp.zeros(()), 0.0))(logits)
+        def ref(l):
+            lp = jax.nn.log_softmax(l[:, :-1], axis=-1)
+            return -jnp.take_along_axis(lp, toks[:, 1:, None], axis=-1).mean()
+        g2 = jax.grad(ref)(logits)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)

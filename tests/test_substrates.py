@@ -1,0 +1,156 @@
+"""Optimizer / checkpoint / data / calibration substrate tests."""
+
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import (
+    batch_iterator,
+    lm_batch_iterator,
+    make_image_dataset,
+    make_lm_dataset,
+)
+from repro.optim import AdamConfig, adam_update, global_norm, init_adam, schedule
+
+
+class TestAdam:
+    def test_converges_on_quadratic(self):
+        params = {"w": jnp.ones((8,)) * 5.0, "b": [jnp.ones((2, 2))]}
+        cfg = AdamConfig(lr=0.05)
+        st_ = init_adam(params, cfg)
+        loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"][0] ** 2)
+        for _ in range(400):
+            g = jax.grad(loss)(params)
+            params, st_, _ = adam_update(g, params, st_, cfg)
+        assert float(loss(params)) < 1e-4
+
+    def test_grad_clip(self):
+        params = {"w": jnp.zeros((4,))}
+        cfg = AdamConfig(lr=0.1, grad_clip_norm=1.0)
+        st_ = init_adam(params, cfg)
+        g = {"w": jnp.full((4,), 100.0)}
+        _, _, gnorm = adam_update(g, params, st_, cfg)
+        assert float(gnorm) == pytest.approx(200.0)
+
+    def test_weight_decay_shrinks(self):
+        params = {"w": jnp.ones((4,)) * 2.0}
+        cfg = AdamConfig(lr=0.01, weight_decay=0.1)
+        st_ = init_adam(params, cfg)
+        g = {"w": jnp.zeros((4,))}
+        p2, _, _ = adam_update(g, params, st_, cfg)
+        assert float(p2["w"][0]) < 2.0
+
+    def test_bf16_state_dtype(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        cfg = AdamConfig(state_dtype="bfloat16")
+        st_ = init_adam(params, cfg)
+        assert st_.mu["w"].dtype == jnp.bfloat16
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 100))
+    def test_global_norm_property(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (17,))
+        tree = {"a": x[:5], "b": [x[5:10], x[10:]]}
+        np.testing.assert_allclose(
+            float(global_norm(tree)), float(jnp.linalg.norm(x)), rtol=1e-5
+        )
+
+
+class TestSchedules:
+    def test_warmup_cosine_shape(self):
+        fn = schedule.warmup_cosine(10, 100)
+        assert float(fn(jnp.asarray(0))) == 0.0
+        assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+        assert float(fn(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+    def test_warmup_linear_endpoints(self):
+        fn = schedule.warmup_linear(10, 110)
+        assert float(fn(jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(fn(jnp.asarray(110))) == pytest.approx(0.0, abs=1e-6)
+
+
+class TestCheckpoint:
+    def test_roundtrip_with_bf16_and_nesting(self):
+        tree = {
+            "a": jnp.ones((3,), jnp.bfloat16),
+            "b": [jnp.zeros((2, 2)), jnp.arange(3)],
+            "c": {"d": jnp.full((1,), 7.0)},
+        }
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 3, tree)
+            save_checkpoint(d, 7, tree)
+            assert latest_step(d) == 7
+            restored, step = restore_checkpoint(d, tree)
+            assert step == 7
+            assert restored["a"].dtype == jnp.bfloat16
+            np.testing.assert_allclose(np.asarray(restored["b"][1]), [0, 1, 2])
+
+    def test_shape_mismatch_raises(self):
+        tree = {"a": jnp.ones((3,))}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, tree)
+            with pytest.raises(ValueError):
+                restore_checkpoint(d, {"a": jnp.ones((4,))})
+
+
+class TestData:
+    def test_image_dataset_learnable_structure(self):
+        (xtr, ytr), (xte, yte) = make_image_dataset(n_train=500, n_test=100)
+        assert xtr.shape == (500, 32, 32, 3)
+        # classes are separable: nearest-prototype accuracy well above chance
+        protos = np.stack([xtr[ytr == c].mean(0) for c in range(10)])
+        d = ((xte[:, None] - protos[None]) ** 2).sum(axis=(2, 3, 4))
+        acc = (d.argmin(1) == yte).mean()
+        assert acc > 0.5
+
+    def test_lm_dataset_markov_structure(self):
+        toks = make_lm_dataset(512, 20_000, seed=0)
+        # successor entropy must be far below uniform
+        pairs = {}
+        for a, b in zip(toks[:-1], toks[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+        ent = []
+        for a, succs in pairs.items():
+            if len(succs) < 20:
+                continue
+            _, counts = np.unique(succs, return_counts=True)
+            p = counts / counts.sum()
+            ent.append(-(p * np.log(p)).sum())
+        assert np.mean(ent) < 0.7 * math.log(512)
+
+    def test_batch_iterators(self):
+        (xtr, ytr), _ = make_image_dataset(n_train=64, n_test=10)
+        xb, yb = next(batch_iterator(xtr, ytr, 16))
+        assert xb.shape == (16, 32, 32, 3)
+        toks = make_lm_dataset(128, 5000)
+        tb = next(lm_batch_iterator(toks, 4, 32))
+        assert tb.shape == (4, 32) and tb.dtype == np.int32
+
+
+class TestCalibration:
+    def test_collect_activations(self):
+        from repro.core.calibration import collect_activations
+
+        apply = lambda p, b: b @ p
+        w = jnp.eye(8)
+        batches = [jnp.ones((4, 8)), jnp.ones((4, 8)) * 2]
+        acts = collect_activations(apply, w, batches)
+        assert acts.shape == (8, 8)
+
+    def test_percentile_clipping(self):
+        from repro.core.calibration import calibrate_quant
+
+        rng = np.random.RandomState(0)
+        acts = rng.randn(1000, 4).astype(np.float32)
+        acts[0, 0] = 1000.0  # outlier
+        spec_raw = calibrate_quant(acts, 8, percentile=0.0)
+        spec_clip = calibrate_quant(acts, 8, percentile=1.0)
+        assert float(spec_raw.s_max[0]) == pytest.approx(1000.0)
+        assert float(spec_clip.s_max[0]) < 10.0
