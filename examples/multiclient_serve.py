@@ -1,0 +1,101 @@
+"""Multi-client serving demo: N IoT devices -> one edge server (repro.net).
+
+Trains the tiny COMtune split CNN, measures its accuracy-vs-delivered-
+fraction curve, then drives the event-driven simulator with a heterogeneous
+client population (iid / Gilbert-Elliott burst / fading channels, Poisson
+arrivals, server-side batching) at several offered loads, reporting
+throughput, p50/p99 round latency, and accuracy under load.
+
+    PYTHONPATH=src python examples/multiclient_serve.py [--clients 24]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.link import ChannelConfig
+from repro.net import (
+    ARQProtocol,
+    SimConfig,
+    accuracy_curve_fn,
+    accuracy_vs_delivery_curve,
+    make_channel,
+    run_sim,
+    train_tiny_model,
+)
+
+
+def client_population(n_clients: int, loss_rate: float):
+    """A heterogeneous fleet: one third each iid / burst / fading (near,
+    mid, far devices)."""
+    channels = []
+    for i in range(n_clients):
+        kind = i % 3
+        if kind == 0:
+            channels.append(make_channel("iid", loss_rate))
+        elif kind == 1:
+            channels.append(make_channel("ge", loss_rate))
+        else:
+            channels.append(
+                make_channel("fading", distance_m=40.0 + 15.0 * (i % 5))
+            )
+    return channels
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=24)
+    ap.add_argument("--loss-rate", type=float, default=0.3)
+    ap.add_argument("--duration", type=float, default=8.0)
+    ap.add_argument("--train-steps", type=int, default=120)
+    args = ap.parse_args()
+    assert args.clients >= 16, "demo is about many concurrent clients"
+
+    print(f"== multi-client serving: {args.clients} clients, "
+          f"p={args.loss_rate} ==")
+    print("training tiny COMtune model + measuring accuracy curve...")
+    model = train_tiny_model(steps=args.train_steps)
+    fracs, accs = accuracy_vs_delivery_curve(model)
+    acc_fn = accuracy_curve_fn(fracs, accs)
+    print("  delivered-fraction -> accuracy: "
+          + ", ".join(f"{f:.2f}:{a:.3f}" for f, a in zip(fracs, accs)))
+
+    n_packets = -(-model.split_dim // 25)   # 100 B packets / 4 B floats
+    channel_cfg = ChannelConfig(loss_rate=args.loss_rate)
+    protocol = ARQProtocol(max_rounds=3)
+    print(f"  uplink: {n_packets} packets/request, "
+          f"slot={channel_cfg.slot_time_s()*1e6:.0f}us, protocol=arq(3)")
+
+    header = (f"{'load rps/client':>16s} {'arrived':>8s} {'served':>7s} "
+              f"{'dropped':>8s} {'rps':>7s} {'p50 ms':>8s} {'p99 ms':>8s} "
+              f"{'frac':>6s} {'acc@load':>9s}")
+    print("\n" + header)
+    for rate in (2.0, 8.0, 20.0):
+        rep = run_sim(
+            SimConfig(
+                n_clients=args.clients,
+                arrival_rate_hz=rate,
+                duration_s=args.duration,
+                n_packets=n_packets,
+                server_batch_max=8,
+                min_delivered_fraction=0.25,
+                seed=0,
+            ),
+            channels=client_population(args.clients, args.loss_rate),
+            protocol=protocol,
+            channel_cfg=channel_cfg,
+            accuracy_fn=acc_fn,
+        )
+        assert rep.arrived == rep.served + rep.dropped
+        print(f"{rate:16.1f} {rep.arrived:8d} {rep.served:7d} "
+              f"{rep.dropped:8d} {rep.throughput_rps:7.1f} "
+              f"{rep.latency_p50_s*1e3:8.2f} {rep.latency_p99_s*1e3:8.2f} "
+              f"{rep.mean_delivered_fraction:6.3f} "
+              f"{rep.accuracy_under_load:9.3f}")
+
+    print("\np99 grows with offered load (queueing + client-radio "
+          "serialization); accuracy tracks delivered fraction.")
+
+
+if __name__ == "__main__":
+    main()

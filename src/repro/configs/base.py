@@ -37,6 +37,18 @@ class LinkConfig:
     quant_bits: int = 8
     pca_dim: int = 0                # 0 -> d_model // 4
 
+    # Channel process at serve time (repro.net.channels registry):
+    # iid | ge | gilbert_elliott | fading | trace.  channel_params is a
+    # hashable tuple of (name, value) pairs for make_channel.
+    channel: str = "iid"
+    channel_params: Tuple = ()
+
+    # Packet-level FEC (repro.net.fec): k data + m parity per block
+    # (m = 0 disables).
+    fec_k: int = 0
+    fec_m: int = 0
+    fec_kind: str = "rs"
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:

@@ -46,11 +46,59 @@ class LinkSpec:
     use_kernel: bool = False           # fused Pallas egress on serve path
     adaptive_compensation: bool = False  # beyond-paper: use observed 1/(1-p̂)
 
+    # Channel process (repro.net.channels registry).  "iid" is the paper's
+    # memoryless channel; "ge"/"gilbert_elliott", "fading", "trace" select
+    # the stateful models.  channel_params is a hashable tuple of (name,
+    # value) pairs forwarded to net.channels.make_channel.
+    channel: str = "iid"
+    channel_params: tuple = ()
+
+    # Packet-level FEC on the serve/train path (repro.net.fec): k data +
+    # m parity packets per block; m = 0 disables coding.
+    fec_k: int = 0
+    fec_m: int = 0
+    fec_kind: str = "rs"
+
     def with_loss_rate(self, p: float) -> "LinkSpec":
         return dataclasses.replace(self, loss_rate=p)
 
     def with_dropout_rate(self, r: float) -> "LinkSpec":
         return dataclasses.replace(self, dropout_rate=r)
+
+    def with_channel(self, channel: str, **params) -> "LinkSpec":
+        return dataclasses.replace(
+            self, channel=channel, channel_params=tuple(sorted(params.items()))
+        )
+
+    @property
+    def uses_net_path(self) -> bool:
+        """True when the link cannot take the plain-iid fast paths (e.g.
+        the fused egress kernel, which bakes in spec.loss_rate): a stateful
+        channel, FEC protection, or a channel_params loss_rate override."""
+        return (
+            self.channel not in ("", "iid")
+            or self.fec_m > 0
+            or "loss_rate" in dict(self.channel_params)
+        )
+
+    @property
+    def fec_spec(self):
+        if self.fec_m <= 0:
+            return None
+        from repro.net.fec import FECSpec
+
+        return FECSpec(k=max(self.fec_k, 1), m=self.fec_m, kind=self.fec_kind)
+
+    def resolve_channel(self):
+        """Instantiate the net.channels model this spec names.  An explicit
+        ("loss_rate", x) entry in channel_params overrides spec.loss_rate."""
+        from repro.net import channels as net_channels
+
+        params = dict(self.channel_params)
+        loss_rate = params.pop("loss_rate", self.loss_rate)
+        return net_channels.make_channel(
+            self.channel or "iid", loss_rate=loss_rate, **params
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -65,32 +113,87 @@ def dropout_link(key: jax.Array, x: jax.Array, rate: float) -> jax.Array:
     return jnp.where(keep, x / jnp.asarray(1.0 - rate, x.dtype), 0.0)
 
 
+def _stateful_channel_mask(key: jax.Array, x: jax.Array, spec: LinkSpec):
+    """Keep-mask + effective stationary loss rate for the non-iid channels
+    (repro.net), honoring FEC protection when enabled."""
+    from repro.net import fec as fec_lib
+    from repro.net.channels import element_mask_from_packets
+
+    ch = spec.resolve_channel()
+    fspec = spec.fec_spec
+    if fspec is not None:
+        flat = fec_lib.fec_element_keep_jnp(
+            key, ch, x.size, spec.elements_per_packet, fspec,
+            shuffle=spec.shuffle,
+        )
+        p_eff = fec_lib.residual_loss_rate(fspec, ch)
+        return flat.reshape(x.shape), p_eff
+    if spec.use_kernel and spec.channel in ("ge", "gilbert_elliott"):
+        # Fused Pallas path: Gilbert–Elliott packet masks generated
+        # on-device so the jit-compiled serving step never leaves XLA.
+        from repro.kernels.lossy_link import ops as ll_ops
+
+        kperm, kmask = jax.random.split(key)
+        n_packets = -(-x.size // spec.elements_per_packet)
+        pkt = ll_ops.burst_mask(
+            kmask, 1, n_packets,
+            p_gb=ch.p_gb, p_bg=ch.p_bg,
+            loss_good=ch.loss_good, loss_bad=ch.loss_bad,
+        )[0]
+        flat = element_mask_from_packets(
+            pkt, x.size, spec.elements_per_packet, kperm, spec.shuffle
+        )
+    else:
+        flat = ch.element_keep_jnp(
+            key, x.size, spec.elements_per_packet, shuffle=spec.shuffle
+        )
+    return flat.reshape(x.shape), ch.stationary_loss_rate
+
+
 def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
     """Eq. (10)-(11): the serving-time channel + compensation, acting on the
-    *compressed* message representation."""
-    if spec.loss_rate <= 0.0:
-        return x
+    *compressed* message representation.  ``spec.channel`` selects the
+    channel process: "iid" keeps the paper's Eq. 1-3 path (with the
+    channel_params loss_rate override honored in place); the stateful
+    models (Gilbert–Elliott bursts, Markov fading, trace replay) and FEC
+    protection route through ``repro.net`` — including iid+FEC, which gets
+    real block-recovery emulation and residual-rate compensation."""
+    if spec.channel in ("", "iid") and spec.fec_m <= 0:
+        # Paper path (Eq. 1-3), honoring spec.granularity.  A channel_params
+        # loss_rate override just replaces the rate here, preserving the
+        # element/packet statistics the caller configured.
+        loss_rate = dict(spec.channel_params).get("loss_rate", spec.loss_rate)
+        if loss_rate <= 0.0:
+            return x
+        if spec.adaptive_compensation:
+            # Beyond-paper: compensate by the realized keep fraction p̂
+            # rather than the nominal p — unbiased per-message instead of
+            # in expectation.
+            if spec.granularity == "element":
+                mask = link_lib.element_loss_mask(key, x.shape, loss_rate)
+            else:
+                flat = link_lib.packet_loss_mask(
+                    key, x.size, loss_rate, spec.elements_per_packet,
+                    spec.shuffle,
+                )
+                mask = flat.reshape(x.shape)
+            kept = jnp.maximum(mask.mean(), 1e-3)
+            return x * mask.astype(x.dtype) / kept.astype(x.dtype)
+        return link_lib.apply_channel(
+            key,
+            x,
+            loss_rate,
+            granularity=spec.granularity,
+            elements_per_packet=spec.elements_per_packet,
+            shuffle=spec.shuffle,
+            compensate=True,
+        )
+    mask, p_eff = _stateful_channel_mask(key, x, spec)
     if spec.adaptive_compensation:
-        # Beyond-paper: compensate by the realized keep fraction p̂ rather
-        # than the nominal p — unbiased per-message instead of in expectation.
-        if spec.granularity == "element":
-            mask = link_lib.element_loss_mask(key, x.shape, spec.loss_rate)
-        else:
-            flat = link_lib.packet_loss_mask(
-                key, x.size, spec.loss_rate, spec.elements_per_packet, spec.shuffle
-            )
-            mask = flat.reshape(x.shape)
         kept = jnp.maximum(mask.mean(), 1e-3)
         return x * mask.astype(x.dtype) / kept.astype(x.dtype)
-    return link_lib.apply_channel(
-        key,
-        x,
-        spec.loss_rate,
-        granularity=spec.granularity,
-        elements_per_packet=spec.elements_per_packet,
-        shuffle=spec.shuffle,
-        compensate=True,
-    )
+    keep = max(1.0 - p_eff, 1e-6)
+    return x * mask.astype(x.dtype) / jnp.asarray(keep, x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +239,15 @@ def distributed_inference(
     """
     a_raw = f_in(params_in, x)
     msg = spec.compressor.compress(a_raw)
-    if spec.use_kernel and spec.compressor.kind == "quant":
+    # The fused egress kernel implements the plain iid channel only;
+    # anything on the net path (bursty channels, FEC, loss-rate override)
+    # must route through channel_link (which has its own Pallas burst_mask
+    # path for GE).
+    if (
+        spec.use_kernel
+        and spec.compressor.kind == "quant"
+        and not spec.uses_net_path
+    ):
         from repro.kernels.lossy_link import ops as ll_ops
 
         a_rec = ll_ops.lossy_link_egress(
@@ -164,7 +275,10 @@ def di_latency_s(
     channel: link_lib.ChannelConfig,
 ) -> float:
     """Communication latency of one DI round (unreliable protocol,
-    §III-B): n_t * l / b."""
+    §III-B): n_t * l / b.  FEC expands n_t by (k+m)/k."""
     total_bytes = message_bytes(spec, feature_dim) * batch
     n_t = -(-int(total_bytes) // channel.packet_bytes)
+    fspec = spec.fec_spec
+    if fspec is not None:
+        n_t = fspec.transmitted_packets(n_t)
     return n_t * channel.slot_time_s()

@@ -64,6 +64,22 @@ def element_loss_mask(key: jax.Array, shape, loss_rate) -> jax.Array:
     return keep.astype(jnp.float32)
 
 
+def element_mask_from_packets(
+    pkt_keep: jax.Array, num_elements: int, elements_per_packet: int,
+    key: jax.Array, shuffle: bool,
+) -> jax.Array:
+    """Expand a packet keep-mask to a flat element mask, optionally applying
+    the paper's anti-burst interleaving permutation (Eq. 2).  This is THE
+    single implementation of the repeat + scatter pipeline — every
+    repro.net channel and the FEC emulation route through it too."""
+    mask = jnp.repeat(pkt_keep.astype(jnp.float32), elements_per_packet)
+    mask = mask[:num_elements]
+    if shuffle:
+        perm = jax.random.permutation(key, num_elements)
+        mask = jnp.zeros((num_elements,), jnp.float32).at[perm].set(mask)
+    return mask
+
+
 def packet_loss_mask(
     key: jax.Array,
     num_elements: int,
@@ -78,18 +94,14 @@ def packet_loss_mask(
     distribution of each element matches Eq. (1).  ``shuffle=False`` models a
     sender that does not interleave, giving burst loss.
     """
+    # The sender permutes elements into packets; the receiver un-permutes.
+    # Net effect on the activation vector: a permuted packet mask.
     kperm, kdrop = jax.random.split(key)
     n_packets = -(-num_elements // elements_per_packet)
     pkt_keep = jax.random.bernoulli(kdrop, 1.0 - loss_rate, (n_packets,))
-    mask = jnp.repeat(pkt_keep, elements_per_packet)[:num_elements]
-    if shuffle:
-        # The sender permutes elements into packets; the receiver un-permutes.
-        # Net effect on the activation vector: a permuted packet mask.
-        perm = jax.random.permutation(kperm, num_elements)
-        mask = jnp.zeros((num_elements,), jnp.float32).at[perm].set(
-            mask.astype(jnp.float32)
-        )
-    return mask.astype(jnp.float32)
+    return element_mask_from_packets(
+        pkt_keep, num_elements, elements_per_packet, kperm, shuffle
+    )
 
 
 def apply_channel(
@@ -116,7 +128,10 @@ def apply_channel(
         raise ValueError(f"unknown granularity: {granularity!r}")
     y = x * mask.astype(x.dtype)
     if compensate:
-        y = y / jnp.asarray(1.0 - loss_rate, x.dtype)
+        # Clamp so loss_rate -> 1.0 returns zeros (everything dropped)
+        # instead of 0 * inf = NaN.
+        keep = jnp.maximum(1.0 - jnp.asarray(loss_rate, jnp.float32), 1e-6)
+        y = y / keep.astype(x.dtype)
     return y
 
 

@@ -1,1 +1,4 @@
-from repro.kernels.lossy_link.ops import lossy_link_egress  # noqa: F401
+from repro.kernels.lossy_link.ops import (  # noqa: F401
+    burst_mask,
+    lossy_link_egress,
+)

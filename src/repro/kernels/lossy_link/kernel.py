@@ -41,9 +41,94 @@ def _egress_kernel(
     deq = code / levels * rng + s_min
 
     keep = u >= jnp.float32(loss_rate)
-    comp = 1.0 / (1.0 - jnp.float32(loss_rate)) if loss_rate > 0.0 else 1.0
+    comp = 1.0 / max(1.0 - float(loss_rate), 1e-6) if loss_rate > 0.0 else 1.0
+    comp = jnp.float32(comp)
     y = jnp.where(keep, deq * comp, 0.0)
     o_ref[...] = y.astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott burst-mask kernel (repro.net serving hot path)
+# ---------------------------------------------------------------------------
+
+def _burst_mask_kernel(
+    uinit_ref, uloss_ref, utr_ref, o_ref,
+    *, p_gb: float, p_bg: float, loss_good: float, loss_bad: float,
+    n_valid: int,
+):
+    """One block of independent Gilbert–Elliott chains.
+
+    Rows are independent channel realizations (one per message in the
+    serving batch); columns are packets in sequence.  The hidden Good/Bad
+    state is carried down the packet axis by a ``fori_loop`` writing one
+    lane-column per step — the chain is inherently sequential in time, but
+    the whole batch of rows advances in lockstep on the VPU, so the Markov
+    process never leaves the device on the jit-compiled serving path.
+    """
+    pi_b = p_gb / max(p_gb + p_bg, 1e-12)
+    bad = (uinit_ref[...] < jnp.float32(pi_b)).reshape(-1, 1)  # (block_r, 1)
+    # Loop only the true packet count: the chain is inherently sequential,
+    # so stepping the lane-padding columns (discarded by the wrapper's
+    # out[:r, :n] slice) would cost real wall-clock.
+    n = n_valid
+
+    def body(t, bad):
+        ul = uloss_ref[:, pl.ds(t, 1)]                         # (block_r, 1)
+        ut = utr_ref[:, pl.ds(t, 1)]
+        p = jnp.where(bad, jnp.float32(loss_bad), jnp.float32(loss_good))
+        o_ref[:, pl.ds(t, 1)] = (ul >= p).astype(o_ref.dtype)
+        return jnp.where(bad, ut >= jnp.float32(p_bg), ut < jnp.float32(p_gb))
+
+    jax.lax.fori_loop(0, n, body, bad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "p_gb", "p_bg", "loss_good", "loss_bad", "block_r", "interpret"
+    ),
+)
+def burst_mask_kernel(
+    u_init: jax.Array,   # (R,) uniform [0, 1): stationary initial state
+    u_loss: jax.Array,   # (R, N) uniforms: per-packet loss draw
+    u_tr: jax.Array,     # (R, N) uniforms: per-packet state transition
+    *,
+    p_gb: float,
+    p_bg: float,
+    loss_good: float,
+    loss_bad: float,
+    block_r: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """(R, N) float32 Gilbert–Elliott packet keep-masks, bit-exact against
+    ``ref.burst_mask_ref`` for identical uniforms."""
+    r, n = u_loss.shape
+    br = min(block_r, r)
+    pad_r = (-r) % br
+    pad_n = (-n) % 128          # lane-align the packet axis
+    if pad_r or pad_n:
+        u_init = jnp.pad(u_init, (0, pad_r), constant_values=1.0)
+        u_loss = jnp.pad(u_loss, ((0, pad_r), (0, pad_n)), constant_values=1.0)
+        u_tr = jnp.pad(u_tr, ((0, pad_r), (0, pad_n)), constant_values=1.0)
+    rp, np_ = u_loss.shape
+    out = pl.pallas_call(
+        functools.partial(
+            _burst_mask_kernel,
+            p_gb=p_gb, p_bg=p_bg, loss_good=loss_good, loss_bad=loss_bad,
+            n_valid=n,
+        ),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, np_), lambda i: (i, 0)),
+            pl.BlockSpec((br, np_), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, np_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, np_), jnp.float32),
+        interpret=interpret,
+    )(u_init.astype(jnp.float32), u_loss.astype(jnp.float32),
+      u_tr.astype(jnp.float32))
+    return out[:r, :n]
 
 
 @functools.partial(

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compression import QuantSpec
-from repro.kernels.lossy_link.kernel import lossy_link_egress_kernel
+from repro.kernels.lossy_link.kernel import (
+    burst_mask_kernel,
+    lossy_link_egress_kernel,
+)
 
 
 def _use_interpret() -> bool:
@@ -34,3 +37,30 @@ def lossy_link_egress(
         interpret=_use_interpret(),
     )
     return out.reshape(shape)
+
+
+def burst_mask(
+    key: jax.Array,
+    n_rows: int,
+    n_packets: int,
+    *,
+    p_gb: float,
+    p_bg: float,
+    loss_good: float = 0.0,
+    loss_bad: float = 1.0,
+) -> jax.Array:
+    """(n_rows, n_packets) float32 Gilbert–Elliott packet keep-masks,
+    generated on-device so the serving hot path stays jit-compiled.  RNG is
+    drawn with jax.random outside the kernel (see module note in
+    kernel.py) and streamed in, keeping interpret-mode validation bit-exact
+    against the lax.scan oracle."""
+    kinit, kloss, ktr = jax.random.split(key, 3)
+    u_init = jax.random.uniform(kinit, (n_rows,), jnp.float32)
+    u_loss = jax.random.uniform(kloss, (n_rows, n_packets), jnp.float32)
+    u_tr = jax.random.uniform(ktr, (n_rows, n_packets), jnp.float32)
+    return burst_mask_kernel(
+        u_init, u_loss, u_tr,
+        p_gb=float(p_gb), p_bg=float(p_bg),
+        loss_good=float(loss_good), loss_bad=float(loss_bad),
+        interpret=_use_interpret(),
+    )

@@ -22,5 +22,25 @@ def lossy_link_egress_ref(
     code = jnp.round((clipped - s_min) / rng * levels)
     deq = code / levels * rng + s_min
     keep = u.astype(jnp.float32) >= jnp.float32(loss_rate)
-    comp = 1.0 / (1.0 - jnp.float32(loss_rate)) if loss_rate > 0.0 else 1.0
+    comp = 1.0 / max(1.0 - float(loss_rate), 1e-6) if loss_rate > 0.0 else 1.0
+    comp = jnp.float32(comp)
     return jnp.where(keep, deq * comp, 0.0).astype(x.dtype)
+
+
+def burst_mask_ref(
+    u_init: jax.Array,   # (R,)
+    u_loss: jax.Array,   # (R, N)
+    u_tr: jax.Array,     # (R, N)
+    *,
+    p_gb: float,
+    p_bg: float,
+    loss_good: float,
+    loss_bad: float,
+) -> jax.Array:
+    """Pure-jnp Gilbert–Elliott oracle (lax.scan over the packet axis);
+    identical comparisons to the Pallas kernel, so masks match exactly."""
+    from repro.net.channels import gilbert_elliott_scan
+
+    return gilbert_elliott_scan(
+        u_init, u_loss, u_tr, p_gb, p_bg, loss_good, loss_bad
+    )

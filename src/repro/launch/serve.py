@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import ARCHITECTURES, get_config
 from repro.core import ChannelConfig, comtune
-from repro.core.compression import Compressor, QuantSpec
+from repro.core.compression import Compressor, PCASpec, QuantSpec
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import cache as cache_lib, lm
 
@@ -32,17 +32,21 @@ def generate(
     loss_rate: float | None = None,
     key=None,
     greedy: bool = True,
+    channel: str | None = None,
 ):
     """Returns (generated (B, num_tokens), timings dict)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     b, s_prompt = prompts.shape
     max_seq = s_prompt + num_tokens
-    if loss_rate is not None:
+    if loss_rate is not None or channel is not None:
         import dataclasses
 
-        cfg = cfg.with_updates(
-            link=dataclasses.replace(cfg.link, loss_rate=loss_rate)
-        )
+        updates = {}
+        if loss_rate is not None:
+            updates["loss_rate"] = loss_rate
+        if channel is not None:
+            updates["channel"] = channel
+        cfg = cfg.with_updates(link=dataclasses.replace(cfg.link, **updates))
     prefill = jax.jit(make_prefill_step(cfg))
     step = jax.jit(make_serve_step(cfg))
 
@@ -63,16 +67,17 @@ def generate(
     t_decode = time.time() - t0
 
     # Communication accounting (paper §III-B).
-    channel = ChannelConfig(loss_rate=cfg.link.loss_rate)
-    comp = Compressor(
-        kind=cfg.link.compression if cfg.link.compression != "pca" else "identity",
-        quant=QuantSpec(
-            bits=cfg.link.quant_bits,
-            s_min=jnp.zeros(()), s_max=jnp.ones(()),
-        ) if cfg.link.compression == "quant" else None,
+    channel_cfg = ChannelConfig(loss_rate=cfg.link.loss_rate)
+    spec = comtune.LinkSpec(
+        loss_rate=cfg.link.loss_rate,
+        compressor=_accounting_compressor(cfg),
+        channel=cfg.link.channel,
+        channel_params=tuple(cfg.link.channel_params),
+        fec_k=cfg.link.fec_k,
+        fec_m=cfg.link.fec_m,
+        fec_kind=cfg.link.fec_kind,
     )
-    spec = comtune.LinkSpec(loss_rate=cfg.link.loss_rate, compressor=comp)
-    per_round_s = comtune.di_latency_s(spec, cfg.d_model, b, channel)
+    per_round_s = comtune.di_latency_s(spec, cfg.d_model, b, channel_cfg)
     timings = {
         "prefill_s": t_prefill,
         "decode_s_per_token": t_decode / max(1, num_tokens),
@@ -82,6 +87,34 @@ def generate(
     return jnp.concatenate(out, axis=1), timings
 
 
+def _accounting_compressor(cfg) -> Compressor:
+    """Compressor reflecting the configured scheme's true message size.
+
+    PCA transmits ``pca_dim`` float32 coefficients per vector (Eq. 18), NOT
+    the full d_model — mapping it to "identity" (as this function once did)
+    over-reported PCA's message size by d_model/pca_dim x.
+    """
+    link = cfg.link
+    if link.compression == "quant":
+        return Compressor(
+            kind="quant",
+            quant=QuantSpec(
+                bits=link.quant_bits,
+                s_min=jnp.zeros(()), s_max=jnp.ones(()),
+            ),
+        )
+    if link.compression == "pca":
+        pca_dim = link.pca_dim or cfg.d_model // 4
+        return Compressor(
+            kind="pca",
+            pca=PCASpec(
+                w=jnp.zeros((pca_dim, cfg.d_model)),
+                b=jnp.zeros((cfg.d_model,)),
+            ),
+        )
+    return Compressor(kind="identity")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
@@ -89,6 +122,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--loss-rate", type=float, default=0.1)
+    ap.add_argument(
+        "--channel", default="iid",
+        choices=["iid", "ge", "gilbert_elliott", "fading"],
+        help="serve-time channel process (repro.net.channels)",
+    )
+    ap.add_argument(
+        "--protocol", default="unreliable",
+        choices=["unreliable", "arq", "fec_arq"],
+        help="report link latency under this repro.net protocol policy",
+    )
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
@@ -101,11 +144,34 @@ def main():
         key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32
     )
     toks, timings = generate(
-        params, cfg, prompts, args.tokens, loss_rate=args.loss_rate, key=key
+        params, cfg, prompts, args.tokens, loss_rate=args.loss_rate, key=key,
+        channel=args.channel,
     )
     print("generated:", np.asarray(toks)[:, :10], "...")
     for k, v in timings.items():
         print(f"{k}: {v:.5f}")
+
+    # Per-round latency PMF under the selected protocol policy (repro.net),
+    # at the selected channel's stationary loss rate (which for "fading" is
+    # set by its distance parameters, not --loss-rate).
+    from repro.net import make_protocol
+    from repro.net.protocol import latency_quantile
+
+    channel_cfg = ChannelConfig(loss_rate=args.loss_rate)
+    spec = comtune.LinkSpec(
+        loss_rate=args.loss_rate,
+        compressor=_accounting_compressor(cfg),
+        channel=args.channel,
+    )
+    p_eff = spec.resolve_channel().stationary_loss_rate
+    n_t = channel_cfg.num_packets_for_bytes(
+        comtune.message_bytes(spec, cfg.d_model) * args.batch
+    )
+    proto = make_protocol(args.protocol)
+    lat, pmf = proto.latency_pmf(n_t, channel_cfg, loss_rate=p_eff)
+    mean_lat = float(np.dot(lat, pmf))
+    p99 = latency_quantile(lat, pmf, 0.99)
+    print(f"protocol={proto.name} E[link_latency_s]: {mean_lat:.5f} p99: {p99:.5f}")
 
 
 if __name__ == "__main__":

@@ -107,12 +107,18 @@ def make_link_fn(
         return None
     compressor = _compressor_from_params(cfg, link_params)
     link = cfg.link
-    spec = comtune.LinkSpec(
+    spec_kwargs = dict(
         dropout_rate=link.dropout_rate,
         loss_rate=link.loss_rate if loss_rate is None else loss_rate,
         compressor=compressor,
-        **(spec_overrides or {}),
+        channel=link.channel,
+        channel_params=tuple(link.channel_params),
+        fec_k=link.fec_k,
+        fec_m=link.fec_m,
+        fec_kind=link.fec_kind,
     )
+    spec_kwargs.update(spec_overrides or {})
+    spec = comtune.LinkSpec(**spec_kwargs)
 
     if mode == "train":
 

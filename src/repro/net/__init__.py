@@ -1,0 +1,68 @@
+"""repro.net — the network subsystem beyond the paper's i.i.d. link.
+
+Layered like a thin protocol stack:
+
+    channels   stateful packet-loss processes (IID / Gilbert-Elliott /
+               Markov fading / trace replay) with NumPy-stateful and
+               JAX-functional execution
+    fec        XOR + Cauchy-Reed-Solomon erasure coding over packets, with
+               a differentiable train-time mask emulation
+    protocol   unreliable / ARQ-with-deadline / hybrid FEC+ARQ policies,
+               each with analytic per-round latency PMFs (generalizing
+               core.link Eq. 4-5)
+    simulator  event-driven multi-client serving simulation (Poisson
+               arrivals, per-client channel state, server batching)
+    traces     record / load / synthesize loss traces
+
+``core.comtune.LinkSpec(channel=..., channel_params=...)`` selects a
+channel model on the train/serve path; ``benchmarks/net_sweep.py`` sweeps
+the channel x protocol x loss-rate grid; ``examples/multiclient_serve.py``
+demonstrates the simulator.
+"""
+
+from repro.net.channels import (  # noqa: F401
+    CHANNELS,
+    Channel,
+    FadingMarkovChannel,
+    GilbertElliottChannel,
+    IIDChannel,
+    TraceChannel,
+    gilbert_elliott_scan,
+    make_channel,
+)
+from repro.net.fec import (  # noqa: F401
+    FECSpec,
+    block_recovery_mask,
+    decode,
+    decode_floats,
+    encode,
+    encode_floats,
+    fec_element_keep_jnp,
+    residual_loss_rate,
+)
+from repro.net.evalhook import (  # noqa: F401
+    accuracy_vs_delivery_curve,
+    accuracy_with_packet_masks,
+    train_tiny_model,
+)
+from repro.net.protocol import (  # noqa: F401
+    ARQProtocol,
+    HybridFECARQProtocol,
+    PROTOCOLS,
+    RoundResult,
+    UnreliableProtocol,
+    make_protocol,
+)
+from repro.net.simulator import (  # noqa: F401
+    SimConfig,
+    SimReport,
+    accuracy_curve_fn,
+    run_sim,
+)
+from repro.net.traces import (  # noqa: F401
+    load_trace,
+    record_trace,
+    save_trace,
+    synthetic_burst_trace,
+    trace_channel,
+)

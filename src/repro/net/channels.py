@@ -1,0 +1,436 @@
+"""Stateful packet-loss channel processes (beyond the paper's Eq. 1).
+
+The paper models the IoT link as i.i.d. Bernoulli packet loss (§III-B).
+Real lossy links are bursty and time-correlated; this module provides four
+channel processes behind one ``Channel`` interface so the COMtune stack,
+the protocol layer, and the multi-client simulator can swap them freely:
+
+* ``IIDChannel``            — the paper's memoryless channel (wraps
+                              ``core.link`` masks).
+* ``GilbertElliottChannel`` — classic two-state (Good/Bad) Markov burst-loss
+                              model; packet loss probability depends on the
+                              hidden state, producing loss bursts with mean
+                              length ``1 / p_bg``.
+* ``FadingMarkovChannel``   — distance/SNR-driven K-state birth-death Markov
+                              chain: log-distance path loss sets the mean
+                              SNR, each state is a quantized fading level,
+                              and per-state packet loss follows the Rayleigh
+                              block-fading outage approximation
+                              ``p_k = 1 - exp(-gamma_th / snr_k)``.
+* ``TraceChannel``          — replays a recorded 0/1 loss trace (see
+                              ``repro.net.traces``), cycling when exhausted.
+
+Every channel exposes BOTH execution styles:
+
+* **NumPy stateful** (``init_state`` / ``step``) — the event-driven
+  simulator advances per-client channel state packet by packet across
+  rounds, preserving burst correlation between consecutive requests.
+* **JAX functional** (``packet_keep_jnp`` / ``element_keep_jnp``) — one
+  fixed-shape mask per message, jit-safe, starting from a stationary-
+  sampled hidden state; this is what ``core.comtune.channel_link`` uses on
+  the serving path.
+
+``stationary_loss_rate`` gives the analytic long-run packet loss rate, used
+for the receiver's ``1/(1-p)`` compensation (Eq. 11) and validated by
+tests/test_net.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class Channel(Protocol):
+    """Common interface of all channel processes."""
+
+    @property
+    def stationary_loss_rate(self) -> float: ...
+
+    def init_state(self, rng: np.random.RandomState): ...
+
+    def step(self, rng: np.random.RandomState, state, n_packets: int
+             ) -> Tuple[np.ndarray, object]:
+        """Advance the process by ``n_packets`` transmissions.
+
+        Returns (keep: bool (n_packets,), new_state)."""
+        ...
+
+    def packet_keep_jnp(self, key: jax.Array, n_packets: int) -> jax.Array:
+        """Jit-safe keep-mask (float32 0/1, shape (n_packets,)) for one
+        message, hidden state sampled from the stationary distribution."""
+        ...
+
+
+# The single Eq. 2 repeat + interleave implementation lives in core.link
+# (the paper-core module); re-exported here because every channel, the FEC
+# emulation, and the eval hook consume it through this package.
+from repro.core.link import element_mask_from_packets  # noqa: E402,F401
+
+
+class _ChannelBase:
+    """Shared element-granularity plumbing on top of ``packet_keep_jnp``."""
+
+    def element_keep_jnp(
+        self, key: jax.Array, num_elements: int, elements_per_packet: int,
+        shuffle: bool = False,
+    ) -> jax.Array:
+        kperm, kmask = jax.random.split(key)
+        n_packets = -(-num_elements // elements_per_packet)
+        pkt = self.packet_keep_jnp(kmask, n_packets)
+        return element_mask_from_packets(
+            pkt, num_elements, elements_per_packet, kperm, shuffle
+        )
+
+    def mean_loss_over(self, rng: np.random.RandomState, n_packets: int) -> float:
+        """Empirical loss rate over one long stateful run (test helper)."""
+        state = self.init_state(rng)
+        keep, _ = self.step(rng, state, n_packets)
+        return 1.0 - float(np.mean(keep))
+
+
+# ---------------------------------------------------------------------------
+# IID (the paper's channel)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IIDChannel(_ChannelBase):
+    """Memoryless Bernoulli packet loss — exactly the paper's Eq. (1)-(3)."""
+
+    loss_rate: float = 0.1
+
+    @property
+    def stationary_loss_rate(self) -> float:
+        return float(self.loss_rate)
+
+    def init_state(self, rng: np.random.RandomState):
+        return None
+
+    def step(self, rng, state, n_packets: int):
+        keep = rng.rand(n_packets) >= self.loss_rate
+        return keep, state
+
+    def packet_keep_jnp(self, key: jax.Array, n_packets: int) -> jax.Array:
+        return jax.random.bernoulli(
+            key, 1.0 - self.loss_rate, (n_packets,)
+        ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott two-state burst loss
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GilbertElliottChannel(_ChannelBase):
+    """Two-state Markov chain: Good (loss ``loss_good``) / Bad (``loss_bad``).
+
+    Transitions per packet: G->B with prob ``p_gb``, B->G with ``p_bg``.
+    Stationary bad-state occupancy pi_b = p_gb / (p_gb + p_bg); stationary
+    packet loss = pi_g * loss_good + pi_b * loss_bad.  Mean burst (bad
+    sojourn) length = 1 / p_bg packets.
+    """
+
+    p_gb: float = 0.05
+    p_bg: float = 0.4
+    loss_good: float = 0.01
+    loss_bad: float = 0.75
+
+    @property
+    def pi_bad(self) -> float:
+        denom = self.p_gb + self.p_bg
+        return float(self.p_gb / denom) if denom > 0 else 0.0
+
+    @property
+    def stationary_loss_rate(self) -> float:
+        pb = self.pi_bad
+        return float((1.0 - pb) * self.loss_good + pb * self.loss_bad)
+
+    @classmethod
+    def from_target(
+        cls, loss_rate: float, burst_len: float = 4.0,
+        loss_good: float = 0.0, loss_bad: float = 1.0,
+    ) -> "GilbertElliottChannel":
+        """Pick (p_gb, p_bg) hitting a target stationary loss rate with mean
+        bad-sojourn ``burst_len`` packets (classic Gilbert construction:
+        Bad always drops, Good never).  High targets with short bursts can
+        demand p_gb > 1; in that case p_gb is pinned at 1 and p_bg lowered
+        (longer bursts) so the stationary rate stays exact."""
+        span = loss_bad - loss_good
+        assert span > 1e-9, "loss_bad must exceed loss_good"
+        pi_b = min(max((loss_rate - loss_good) / span, 0.0), 0.999)
+        p_bg = 1.0 / max(burst_len, 1.0)
+        p_gb = p_bg * pi_b / max(1.0 - pi_b, 1e-9)
+        if p_gb > 1.0:
+            p_gb = 1.0
+            p_bg = (1.0 - pi_b) / pi_b   # pi_b >= 0.5 here, so p_bg <= 1
+        return cls(p_gb=p_gb, p_bg=p_bg, loss_good=loss_good, loss_bad=loss_bad)
+
+    # -- NumPy stateful --
+
+    def init_state(self, rng: np.random.RandomState):
+        return bool(rng.rand() < self.pi_bad)  # True = Bad
+
+    def step(self, rng, state: bool, n_packets: int):
+        keep = np.empty(n_packets, dtype=bool)
+        bad = state
+        u_loss = rng.rand(n_packets)
+        u_tr = rng.rand(n_packets)
+        for t in range(n_packets):
+            p = self.loss_bad if bad else self.loss_good
+            keep[t] = u_loss[t] >= p
+            if bad:
+                bad = u_tr[t] >= self.p_bg
+            else:
+                bad = u_tr[t] < self.p_gb
+        return keep, bad
+
+    # -- JAX functional --
+
+    def packet_keep_jnp(self, key: jax.Array, n_packets: int) -> jax.Array:
+        kinit, kloss, ktr = jax.random.split(key, 3)
+        u_init = jax.random.uniform(kinit, ())
+        u_loss = jax.random.uniform(kloss, (n_packets,))
+        u_tr = jax.random.uniform(ktr, (n_packets,))
+        return gilbert_elliott_scan(
+            u_init, u_loss, u_tr,
+            self.p_gb, self.p_bg, self.loss_good, self.loss_bad,
+        )
+
+
+def gilbert_elliott_scan(
+    u_init: jax.Array,   # () uniform: stationary initial state draw
+    u_loss: jax.Array,   # (..., N) uniforms: per-packet loss draw
+    u_tr: jax.Array,     # (..., N) uniforms: per-packet state transition
+    p_gb: float, p_bg: float, loss_good: float, loss_bad: float,
+) -> jax.Array:
+    """Pure-JAX Gilbert–Elliott keep-mask via ``lax.scan`` over the packet
+    axis (the last axis); leading axes are independent chains.  This is also
+    the bit-exact oracle for the Pallas ``burst_mask`` kernel."""
+    pi_b = p_gb / max(p_gb + p_bg, 1e-12)
+    bad0 = (u_init < pi_b)
+    bad0 = jnp.broadcast_to(bad0, u_loss.shape[:-1])
+
+    def body(bad, uu):
+        ul, ut = uu
+        p = jnp.where(bad, jnp.float32(loss_bad), jnp.float32(loss_good))
+        keep = (ul >= p).astype(jnp.float32)
+        nxt = jnp.where(bad, ut >= jnp.float32(p_bg), ut < jnp.float32(p_gb))
+        return nxt, keep
+
+    # scan over last axis: move it to front
+    ul = jnp.moveaxis(u_loss.astype(jnp.float32), -1, 0)
+    ut = jnp.moveaxis(u_tr.astype(jnp.float32), -1, 0)
+    _, keep = jax.lax.scan(body, bad0, (ul, ut))
+    return jnp.moveaxis(keep, 0, -1)
+
+
+# ---------------------------------------------------------------------------
+# Distance/SNR-driven Markov fading
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FadingMarkovChannel(_ChannelBase):
+    """Finite-state Markov channel over quantized Rayleigh fading levels.
+
+    Mean SNR from log-distance path loss:
+        snr_db = tx_power_dbm - (pl0_db + 10 * pl_exp * log10(d / d0)) - noise_dbm
+    The fading gain is quantized into ``n_states`` levels (state k scales the
+    mean SNR by ``gain_k``); per-state packet loss uses the block-fading
+    outage approximation p_k = 1 - exp(-gamma_th / snr_k).  The state chain
+    is birth-death with mobility parameter ``agility`` (probability of moving
+    to an adjacent level per packet), the standard FSMC construction.
+    """
+
+    distance_m: float = 50.0
+    tx_power_dbm: float = 14.0      # typical IoT radio
+    noise_dbm: float = -90.0
+    pl0_db: float = 40.0            # path loss at d0 = 1 m
+    pl_exp: float = 3.0             # indoor/urban exponent
+    gamma_th_db: float = 3.0        # SNR threshold for packet success
+    n_states: int = 4
+    agility: float = 0.25
+
+    @property
+    def mean_snr_db(self) -> float:
+        pl = self.pl0_db + 10.0 * self.pl_exp * np.log10(max(self.distance_m, 1.0))
+        return float(self.tx_power_dbm - pl - self.noise_dbm)
+
+    def _state_loss_rates(self) -> np.ndarray:
+        """Per-state packet loss p_k, states ordered deep-fade -> strong."""
+        snr_lin = 10.0 ** (self.mean_snr_db / 10.0)
+        gamma_th = 10.0 ** (self.gamma_th_db / 10.0)
+        # Quantized fading gains: log-spaced from -10 dB to +5 dB around mean.
+        gains_db = np.linspace(-10.0, 5.0, self.n_states)
+        snr_k = snr_lin * 10.0 ** (gains_db / 10.0)
+        return 1.0 - np.exp(-gamma_th / np.maximum(snr_k, 1e-9))
+
+    def _transition_matrix(self) -> np.ndarray:
+        k, a = self.n_states, self.agility
+        tm = np.zeros((k, k))
+        for i in range(k):
+            up = a / 2 if i + 1 < k else 0.0
+            dn = a / 2 if i > 0 else 0.0
+            tm[i, i] = 1.0 - up - dn
+            if i + 1 < k:
+                tm[i, i + 1] = up
+            if i > 0:
+                tm[i, i - 1] = dn
+        return tm
+
+    @property
+    def stationary_loss_rate(self) -> float:
+        cum_tm, losses, pi = _fading_tables(self)
+        return float(np.dot(pi, losses))
+
+    # -- NumPy stateful --
+
+    def init_state(self, rng: np.random.RandomState):
+        cum_pi = np.cumsum(_fading_tables(self)[2])
+        return int(min(np.searchsorted(cum_pi, rng.rand()),
+                       self.n_states - 1))
+
+    def step(self, rng, state: int, n_packets: int):
+        cum_tm, losses, _ = _fading_tables(self)
+        u_loss = rng.rand(n_packets)
+        u_tr = rng.rand(n_packets)
+        keep = np.empty(n_packets, dtype=bool)
+        s = state
+        for t in range(n_packets):
+            keep[t] = u_loss[t] >= losses[s]
+            s = int(min(np.searchsorted(cum_tm[s], u_tr[t]),
+                        self.n_states - 1))
+        return keep, s
+
+    # -- JAX functional --
+
+    def packet_keep_jnp(self, key: jax.Array, n_packets: int) -> jax.Array:
+        np_cum_tm, np_losses, np_pi = _fading_tables(self)
+        cum_tm = jnp.asarray(np_cum_tm, jnp.float32)
+        losses = jnp.asarray(np_losses, jnp.float32)
+        pi = jnp.asarray(np_pi, jnp.float32)
+        kinit, kloss, ktr = jax.random.split(key, 3)
+        s0 = jnp.searchsorted(jnp.cumsum(pi), jax.random.uniform(kinit, ()))
+        s0 = jnp.clip(s0, 0, self.n_states - 1)
+        u_loss = jax.random.uniform(kloss, (n_packets,))
+        u_tr = jax.random.uniform(ktr, (n_packets,))
+
+        def body(s, uu):
+            ul, ut = uu
+            keep = (ul >= losses[s]).astype(jnp.float32)
+            nxt = jnp.clip(
+                jnp.searchsorted(cum_tm[s], ut), 0, self.n_states - 1
+            )
+            return nxt, keep
+
+        _, keep = jax.lax.scan(body, s0, (u_loss, u_tr))
+        return keep
+
+
+@functools.lru_cache(maxsize=64)
+def _fading_tables(ch: FadingMarkovChannel):
+    """(cumulative transition matrix, per-state loss rates, stationary
+    distribution) — cached per (frozen, hashable) channel config so the
+    simulator's per-packet hot loop never rebuilds them."""
+    tm = ch._transition_matrix()
+    losses = ch._state_loss_rates()
+    pi = np.full(ch.n_states, 1.0 / ch.n_states)
+    for _ in range(500):
+        pi = pi @ tm
+    pi = pi / pi.sum()
+    return np.cumsum(tm, axis=1), losses, pi
+
+
+# ---------------------------------------------------------------------------
+# Trace replay
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceChannel(_ChannelBase):
+    """Replays a recorded loss trace (1 = packet delivered, 0 = lost),
+    cycling when the trace is exhausted.  State = replay position."""
+
+    keep_trace: tuple = ()           # tuple of 0/1 ints (hashable/frozen)
+
+    @staticmethod
+    def from_array(trace) -> "TraceChannel":
+        arr = np.asarray(trace).astype(np.int32).reshape(-1)
+        assert arr.size > 0, "empty trace"
+        return TraceChannel(keep_trace=tuple(int(v) for v in arr))
+
+    @property
+    def stationary_loss_rate(self) -> float:
+        arr = np.asarray(self.keep_trace)
+        return float(1.0 - arr.mean()) if arr.size else 0.0
+
+    def init_state(self, rng: np.random.RandomState):
+        return int(rng.randint(len(self.keep_trace)))  # random phase
+
+    def step(self, rng, state: int, n_packets: int):
+        arr = _trace_array(self)
+        idx = (state + np.arange(n_packets)) % arr.size
+        return arr[idx], int((state + n_packets) % arr.size)
+
+    def packet_keep_jnp(self, key: jax.Array, n_packets: int) -> jax.Array:
+        arr = jnp.asarray(_trace_array(self), jnp.float32)
+        start = jax.random.randint(key, (), 0, arr.size)
+        idx = (start + jnp.arange(n_packets)) % arr.size
+        return arr[idx]
+
+
+@functools.lru_cache(maxsize=64)
+def _trace_array(ch: TraceChannel) -> np.ndarray:
+    """The trace as an ndarray, cached per frozen channel — step() runs once
+    per protocol round, and re-converting a long tuple each time dominated
+    simulation wall-clock."""
+    return np.asarray(ch.keep_trace, dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# Registry / LinkSpec plumbing
+# ---------------------------------------------------------------------------
+
+CHANNELS = {
+    "iid": IIDChannel,
+    "gilbert_elliott": GilbertElliottChannel,
+    "ge": GilbertElliottChannel,
+    "fading": FadingMarkovChannel,
+    "trace": TraceChannel,
+}
+
+
+def make_channel(name: str, loss_rate: float = 0.1, **params) -> Channel:
+    """Build a channel by registry name.
+
+    ``loss_rate`` seeds sensible defaults: for ``ge`` it picks a
+    burst-4 Gilbert construction with that stationary rate (unless explicit
+    p_gb/p_bg are given); for ``iid`` it is the Bernoulli rate; for
+    ``fading``/``trace`` it is ignored in favour of their own params.
+    """
+    key = name.lower()
+    if key not in CHANNELS:
+        raise ValueError(
+            f"unknown channel {name!r}; available: {sorted(set(CHANNELS))}"
+        )
+    if key in ("ge", "gilbert_elliott"):
+        params.pop("loss_rate", None)
+        if "p_gb" in params or "p_bg" in params:
+            # Explicit transition probabilities: direct construction.
+            return GilbertElliottChannel(**params)
+        # Otherwise hit the target stationary rate; params may tune
+        # burst_len / loss_good / loss_bad of the from_target construction.
+        return GilbertElliottChannel.from_target(loss_rate, **params)
+    if key == "iid":
+        return IIDChannel(loss_rate=params.pop("loss_rate", loss_rate))
+    if key == "fading":
+        return FadingMarkovChannel(**params)
+    if key == "trace":
+        if "keep_trace" in params:
+            return TraceChannel(keep_trace=tuple(params["keep_trace"]))
+        raise ValueError("trace channel requires keep_trace=...")
+    raise AssertionError(key)

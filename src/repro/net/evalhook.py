@@ -1,0 +1,175 @@
+"""Bridge between the network subsystem and model accuracy.
+
+The simulator and the channel/protocol sweep both need to turn "fraction of
+the split activation delivered" into "task accuracy".  This module trains a
+small COMtune split CNN once (reduced-size, CPU-friendly — smaller than
+``repro.paper.experiment``'s benchmark model) and provides:
+
+* ``accuracy_with_packet_masks`` — exact evaluation: per-sample packet
+  delivery masks (e.g. produced by ``protocol.run_round`` against a bursty
+  channel) are expanded to element masks with the paper's interleaving and
+  pushed through the server half of the model.
+* ``accuracy_vs_delivery_curve`` — the measured accuracy at a grid of
+  delivered fractions, for use with ``simulator.accuracy_curve_fn`` to
+  report accuracy under load without re-running the model per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.data as data
+from repro.core import comtune
+from repro.models import cnn
+from repro.optim import AdamConfig, adam_update, init_adam
+
+TINY_CFG = cnn.CNNConfig(
+    blocks=((1, 8), (1, 16)),
+    fc=(32,),
+    num_classes=10,
+    image_size=32,
+    split_block=1,
+)
+
+
+@dataclasses.dataclass
+class TinyModel:
+    params: dict
+    state: dict
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @property
+    def split_dim(self) -> int:
+        return TINY_CFG.split_activation_dim
+
+
+_CACHE: dict = {}
+
+
+def train_tiny_model(
+    steps: int = 150,
+    dropout_rate: float = 0.3,
+    seed: int = 0,
+    n_train: int = 800,
+    n_test: int = 400,
+) -> TinyModel:
+    """COMtune-train the tiny split CNN (dropout link at the split, Eq. 8)
+    from scratch — one phase, enough for the orderings these sweeps report."""
+    key_ = (steps, round(dropout_rate, 3), seed, n_train, n_test)
+    if key_ in _CACHE:
+        return _CACHE[key_]
+    (xtr, ytr), (xte, yte) = data.make_image_dataset(
+        n_train=n_train, n_test=n_test, num_classes=10, image_size=32,
+        noise=2.0, signal_min=0.35, sub_prototypes=2, seed=seed,
+    )
+    adam_cfg = AdamConfig(lr=2e-3)
+    key = jax.random.PRNGKey(seed)
+    params, state = cnn.init_cnn(key, TINY_CFG)
+    opt = init_adam(params, adam_cfg)
+    it = data.batch_iterator(xtr, ytr, 64, seed=seed)
+
+    @jax.jit
+    def step(params, state, opt, xb, yb, k):
+        def loss_fn(p):
+            def link(a):
+                return comtune.dropout_link(k, a, dropout_rate)
+
+            logits, new_state = cnn.forward(
+                p, state, xb, TINY_CFG, train=True,
+                link_fn=link if dropout_rate > 0 else None,
+            )
+            ll = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(ll, yb[:, None], axis=-1).mean(), new_state
+
+        (_, new_state), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adam_update(g, params, opt, adam_cfg)
+        return params, new_state, opt
+
+    for _ in range(steps):
+        xb, yb = next(it)
+        key, sub = jax.random.split(key)
+        params, state, opt = step(
+            params, state, opt, jnp.asarray(xb), jnp.asarray(yb), sub
+        )
+    model = TinyModel(params=params, state=state, x_test=xte, y_test=yte)
+    _CACHE[key_] = model
+    return model
+
+
+def split_activations(model: TinyModel) -> np.ndarray:
+    a, _ = cnn.forward_device(
+        model.params, model.state, jnp.asarray(model.x_test), TINY_CFG
+    )
+    return np.asarray(a)
+
+
+def _expand_packet_masks(
+    pkt_masks: np.ndarray,               # (B, n_packets) bool
+    num_elements: int,
+    elements_per_packet: int,
+    key: jax.Array,
+    shuffle: bool = True,
+) -> np.ndarray:
+    """(B, num_elements) float32 element masks with per-sample interleaving
+    — vmapped over the single shared Eq. 2 implementation in
+    ``repro.net.channels`` so the eval path cannot drift from what
+    ``channel_link`` simulates."""
+    from repro.net.channels import element_mask_from_packets
+
+    keys = jax.random.split(key, pkt_masks.shape[0])
+    fn = jax.vmap(
+        lambda m, k: element_mask_from_packets(
+            m, num_elements, elements_per_packet, k, shuffle
+        )
+    )
+    return np.asarray(fn(jnp.asarray(pkt_masks, jnp.float32), keys))
+
+
+def accuracy_with_packet_masks(
+    model: TinyModel,
+    pkt_masks: np.ndarray,               # (B, n_packets) bool, B = len(x_test)
+    elements_per_packet: int = 25,
+    seed: int = 0,
+    activations: Optional[np.ndarray] = None,
+) -> float:
+    """DI accuracy with per-sample packet delivery masks applied at the
+    split, using per-sample realized-fraction compensation (unbiased for
+    partial delivery, the adaptive variant of Eq. 11)."""
+    a = split_activations(model) if activations is None else activations
+    masks = _expand_packet_masks(
+        pkt_masks, a.shape[1], elements_per_packet, jax.random.PRNGKey(seed)
+    )
+    frac = np.maximum(masks.mean(axis=1, keepdims=True), 1e-3)
+    a_rx = a * masks / frac
+    logits, _ = cnn.forward_server(
+        model.params, model.state, jnp.asarray(a_rx), TINY_CFG
+    )
+    return float((jnp.argmax(logits, -1) == jnp.asarray(model.y_test)).mean())
+
+
+def accuracy_vs_delivery_curve(
+    model: TinyModel,
+    fractions: Sequence[float] = (1.0, 0.9, 0.75, 0.6, 0.4, 0.2, 0.05),
+    seed: int = 0,
+) -> Tuple[list, list]:
+    """Measured accuracy at each delivered fraction (random element masks);
+    feed the result to ``simulator.accuracy_curve_fn``."""
+    a = split_activations(model)
+    rng = np.random.RandomState(seed)
+    accs = []
+    for f in fractions:
+        masks = (rng.rand(*a.shape) < f).astype(np.float32)
+        fr = np.maximum(masks.mean(axis=1, keepdims=True), 1e-3)
+        logits, _ = cnn.forward_server(
+            model.params, model.state, jnp.asarray(a * masks / fr), TINY_CFG
+        )
+        accs.append(
+            float((jnp.argmax(logits, -1) == jnp.asarray(model.y_test)).mean())
+        )
+    return list(fractions), accs

@@ -1,0 +1,329 @@
+"""Link-layer protocol policies over the packet channel.
+
+The paper compares only two extremes (§III-B): a *reliable* protocol
+(retransmit forever, Eq. 5 negative-binomial latency) and an *unreliable*
+one (one shot, Eq. 4 binomial delivery).  Real IoT deployments sit between
+them.  This module provides three policies behind one interface:
+
+* ``UnreliableProtocol``   — one transmission attempt per packet;
+  deterministic latency ``n_t * T``, partial delivery (exactly Eq. 4).
+* ``ARQProtocol``          — round-based selective-repeat ARQ with a
+  retransmission budget: undelivered packets are retransmitted for up to
+  ``max_rounds`` rounds (or until a latency ``deadline_s`` would be
+  exceeded).  ``max_rounds=inf`` recovers the paper's reliable protocol.
+* ``HybridFECARQProtocol`` — each round transmits FEC-encoded blocks
+  (``repro.net.fec``); a block is delivered when ≥ k of its k+m packets
+  arrive; unrecovered blocks are retransmitted subject to the same budget.
+
+Each policy offers:
+
+* ``latency_pmf(n_packets, channel_cfg)`` — analytic per-round latency PMF
+  (support over slot counts), generalizing ``core.link``'s Eq. 4-5
+  analytics; computed by dynamic programming over the per-round binomial
+  delivery process at the channel's stationary loss rate.
+* ``expected_delivery_rate(n_packets, channel)`` — mean fraction of data
+  packets available to the receiver at the end of the exchange.
+* ``run_round(rng, channel, state, n_packets)`` — stateful Monte-Carlo
+  execution against a *bursty* channel (the event-driven simulator path),
+  returning per-data-packet delivery, slot count, and the advanced channel
+  state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import link as link_lib
+from repro.net import fec as fec_lib
+from repro.net.channels import Channel
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundResult:
+    """Outcome of one protocol round for one request."""
+
+    delivered: np.ndarray            # bool (n_data_packets,)
+    slots: int                       # total packet-slots spent on the air
+    rounds: int                      # transmission rounds used
+
+    @property
+    def delivered_fraction(self) -> float:
+        return float(np.mean(self.delivered))
+
+    @property
+    def complete(self) -> bool:
+        return bool(np.all(self.delivered))
+
+
+def latency_quantile(lat: np.ndarray, pmf: np.ndarray, q: float) -> float:
+    """Quantile of a discrete latency PMF (support assumed sorted)."""
+    return float(lat[min(np.searchsorted(np.cumsum(pmf), q), lat.size - 1)])
+
+
+def _binom_pmf(n: int, p_success: float) -> np.ndarray:
+    """PMF over number of successes in n i.i.d. trials (support 0..n)."""
+    if n == 0:
+        return np.ones(1)
+    ks = np.arange(n + 1)
+    if p_success <= 0.0:
+        out = np.zeros(n + 1)
+        out[0] = 1.0
+        return out
+    if p_success >= 1.0:
+        out = np.zeros(n + 1)
+        out[-1] = 1.0
+        return out
+    logp = (
+        link_lib.log_binom_coeff(n, ks)
+        + ks * np.log(p_success)
+        + (n - ks) * np.log1p(-p_success)
+    )
+    pmf = np.exp(logp)
+    return pmf / pmf.sum()
+
+
+class _ProtocolBase:
+    name: str = "base"
+
+    def latency_pmf(
+        self, n_packets: int, channel_cfg: link_lib.ChannelConfig,
+        loss_rate: Optional[float] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def expected_latency_s(
+        self, n_packets: int, channel_cfg: link_lib.ChannelConfig,
+        loss_rate: Optional[float] = None,
+    ) -> float:
+        lat, pmf = self.latency_pmf(n_packets, channel_cfg, loss_rate)
+        return float(np.dot(lat, pmf))
+
+    def run_round(self, rng, channel: Channel, state, n_packets: int
+                  ) -> Tuple[RoundResult, object]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Unreliable (paper Eq. 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UnreliableProtocol(_ProtocolBase):
+    """One shot per packet; latency is deterministic, delivery partial."""
+
+    name: str = "unreliable"
+
+    def latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
+        lat = np.array([n_packets * channel_cfg.slot_time_s()])
+        return lat, np.ones(1)
+
+    def expected_delivery_rate(self, n_packets: int, channel: Channel) -> float:
+        return 1.0 - channel.stationary_loss_rate
+
+    def run_round(self, rng, channel, state, n_packets):
+        keep, state = channel.step(rng, state, n_packets)
+        return RoundResult(keep.copy(), n_packets, 1), state
+
+
+# ---------------------------------------------------------------------------
+# ARQ with a retransmission/deadline budget
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ARQProtocol(_ProtocolBase):
+    """Round-based selective-repeat ARQ.
+
+    Round 1 transmits all ``n`` packets; round j retransmits the packets
+    still missing.  Stops when everything is delivered, after ``max_rounds``
+    rounds, or once ``deadline_slots`` packet-slots have been spent (the
+    "ARQ-with-deadline" policy: latency is bounded, delivery best-effort).
+    A large integer ``max_rounds`` budget (e.g. 60) with no deadline
+    approaches the paper's reliable protocol to numerical precision
+    (Eq. 5 is the n=1-per-slot special case of the same process).
+    """
+
+    max_rounds: int = 4
+    deadline_slots: Optional[int] = None
+    name: str = "arq"
+
+    def _deadline_hit(self, slots: int) -> bool:
+        return (
+            self.deadline_slots is not None and slots >= self.deadline_slots
+        )
+
+    def latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
+        """DP over (round, missing count) at the stationary loss rate.
+
+        State: number of packets still missing entering round j.  Latency
+        accumulated = sum over rounds of (missing_j) slots; we track the
+        joint distribution of (missing, slots spent).
+        """
+        p = channel_cfg.loss_rate if loss_rate is None else loss_rate
+        T = channel_cfg.slot_time_s()
+        # dist: {(missing, slots): prob} entering the next round
+        dist = {(n_packets, 0): 1.0}
+        done: dict = {}
+        for _ in range(self.max_rounds):
+            nxt: dict = {}
+            for (miss, slots), prob in dist.items():
+                if miss == 0 or self._deadline_hit(slots):
+                    done[slots] = done.get(slots, 0.0) + prob
+                    continue
+                new_slots = slots + miss
+                pmf = _binom_pmf(miss, 1.0 - p)
+                for recv, pr in enumerate(pmf):
+                    if pr < 1e-15:
+                        continue
+                    key = (miss - recv, new_slots)
+                    nxt[key] = nxt.get(key, 0.0) + prob * pr
+            dist = nxt
+            if not dist:
+                break
+        for (miss, slots), prob in dist.items():
+            done[slots] = done.get(slots, 0.0) + prob
+        slots = np.array(sorted(done))
+        pmf = np.array([done[s] for s in slots])
+        return slots * T, pmf / pmf.sum()
+
+    def expected_delivery_rate(self, n_packets: int, channel: Channel) -> float:
+        """Per-packet delivery 1 - p^rounds, where the round count honors
+        the deadline budget via a mean-field slot estimate.  With no
+        deadline this is exactly 1 - p^max_rounds, independent of n."""
+        p = channel.stationary_loss_rate
+        rounds = 0
+        slots = 0.0
+        missing = float(n_packets)
+        for _ in range(self.max_rounds):
+            if self._deadline_hit(int(slots)):
+                break
+            rounds += 1
+            slots += missing
+            missing *= p
+        return 1.0 - p ** max(rounds, 1)
+
+    def run_round(self, rng, channel, state, n_packets):
+        delivered = np.zeros(n_packets, dtype=bool)
+        slots = 0
+        rounds = 0
+        for _ in range(self.max_rounds):
+            missing = np.flatnonzero(~delivered)
+            if missing.size == 0 or self._deadline_hit(slots):
+                break
+            rounds += 1
+            keep, state = channel.step(rng, state, missing.size)
+            delivered[missing[keep]] = True
+            slots += missing.size
+        return RoundResult(delivered, slots, max(rounds, 1)), state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid FEC + ARQ
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HybridFECARQProtocol(_ProtocolBase):
+    """FEC-coded rounds with block-level retransmission.
+
+    Each round transmits the unrecovered blocks' full codewords (k data +
+    m parity packets, ``repro.net.fec``); a block is recovered when ≥ k of
+    its packets arrive.  Up to ``max_rounds`` rounds.
+    """
+
+    fec: fec_lib.FECSpec = dataclasses.field(default_factory=fec_lib.FECSpec)
+    max_rounds: int = 2
+    name: str = "fec_arq"
+
+    def _block_fail_prob(self, p: float) -> float:
+        km = self.fec.block_packets
+        pmf = _binom_pmf(km, 1.0 - p)           # over received count
+        return float(pmf[: self.fec.k].sum())   # received < k -> unrecoverable
+
+    def latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
+        """DP over number of unrecovered blocks per round (stationary p)."""
+        p = channel_cfg.loss_rate if loss_rate is None else loss_rate
+        T = channel_cfg.slot_time_s()
+        n_blocks = self.fec.num_blocks(n_packets)
+        km = self.fec.block_packets
+        pfail = self._block_fail_prob(p)
+        dist = {(n_blocks, 0): 1.0}
+        done: dict = {}
+        for _ in range(self.max_rounds):
+            nxt: dict = {}
+            for (miss, slots), prob in dist.items():
+                if miss == 0:
+                    done[slots] = done.get(slots, 0.0) + prob
+                    continue
+                new_slots = slots + miss * km
+                pmf = _binom_pmf(miss, 1.0 - pfail)  # over recovered blocks
+                for rec, pr in enumerate(pmf):
+                    if pr < 1e-15:
+                        continue
+                    key = (miss - rec, new_slots)
+                    nxt[key] = nxt.get(key, 0.0) + prob * pr
+            dist = nxt
+            if not dist:
+                break
+        for (miss, slots), prob in dist.items():
+            done[slots] = done.get(slots, 0.0) + prob
+        slots = np.array(sorted(done))
+        pmf = np.array([done[s] for s in slots])
+        return slots * T, pmf / pmf.sum()
+
+    def expected_delivery_rate(self, n_packets: int, channel: Channel) -> float:
+        pfail = self._block_fail_prob(channel.stationary_loss_rate)
+        resid = fec_lib.residual_loss_rate(self.fec, channel)
+        # After max_rounds block retries the unrecovered fraction is
+        # pfail^max_rounds, within which the data-loss fraction is resid/pfail
+        # per round; a simple tight bound: 1 - residual^rounds behaviour.
+        return float(1.0 - resid * pfail ** (self.max_rounds - 1))
+
+    def run_round(self, rng, channel, state, n_packets):
+        spec = self.fec
+        n_blocks = spec.num_blocks(n_packets)
+        km = spec.block_packets
+        # Per-block: data-packet delivery after decode.
+        block_ok = np.zeros(n_blocks, dtype=bool)
+        data_keep = np.zeros((n_blocks, spec.k), dtype=bool)
+        slots = 0
+        rounds = 0
+        for _ in range(self.max_rounds):
+            todo = np.flatnonzero(~block_ok)
+            if todo.size == 0:
+                break
+            rounds += 1
+            keep, state = channel.step(rng, state, todo.size * km)
+            keep = keep.reshape(todo.size, km)
+            for n, b in enumerate(todo):
+                if keep[n].sum() >= spec.k:
+                    block_ok[b] = True
+                    data_keep[b] = True      # decoder restores all k exactly
+                else:
+                    data_keep[b] |= keep[n, : spec.k]
+            slots += todo.size * km
+        delivered = data_keep.reshape(-1)[:n_packets]
+        return RoundResult(delivered, slots, max(rounds, 1)), state
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+PROTOCOLS = {
+    "unreliable": UnreliableProtocol,
+    "arq": ARQProtocol,
+    "fec_arq": HybridFECARQProtocol,
+}
+
+
+def make_protocol(name: str, **params) -> _ProtocolBase:
+    key = name.lower()
+    if key not in PROTOCOLS:
+        raise ValueError(
+            f"unknown protocol {name!r}; available: {sorted(PROTOCOLS)}"
+        )
+    if key == "fec_arq" and "fec" in params and isinstance(params["fec"], dict):
+        params = dict(params, fec=fec_lib.FECSpec(**params["fec"]))
+    return PROTOCOLS[key](**params)

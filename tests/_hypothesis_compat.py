@@ -1,0 +1,87 @@
+"""Hypothesis import with a deterministic fallback for bare installs.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  When hypothesis is installed the real library is
+used unchanged; when it is missing (the container only bakes in the
+jax/pallas toolchain) a tiny shim runs each property test over a fixed
+number of deterministically-sampled examples.  The shim covers only the
+strategy surface these tests use (``st.integers``/``st.floats`` with
+inclusive bounds) — it is NOT a general hypothesis replacement, and it does
+no shrinking; it exists so the tier-1 suite collects and exercises the
+properties on a bare install.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is present
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback shim
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_MAX_EXAMPLES = 10  # cap so the shim stays fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._shim_settings = kwargs
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                conf = getattr(wrapper, "_shim_settings", {})
+                n = min(
+                    int(conf.get("max_examples", _FALLBACK_MAX_EXAMPLES)),
+                    _FALLBACK_MAX_EXAMPLES,
+                )
+                rng = random.Random(0xC0117)  # fixed seed: reproducible draws
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # Hide the strategy-filled params from pytest's fixture resolver.
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items()
+                    if name not in strategies
+                ]
+            )
+            return wrapper
+
+        return deco
