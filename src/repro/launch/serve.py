@@ -2,10 +2,15 @@
 emulated lossy IoT link — the paper's DI round (Eq. 12) generalized to
 autoregressive decoding.
 
-Each generate() call: prefill (prompt activation crosses the link once) then
-per-token serve_steps (each new token's split activation crosses the link).
-Reports per-round message sizes and the analytic communication latency of
-the unreliable protocol (paper §III-B).
+``generate()`` routes through the scan-compiled ``repro.serve`` engine:
+the whole generation (prefill + every per-token DI round) is one jitted
+``lax.scan`` program, compile-cached per (arch, batch, prompt_len,
+num_tokens, link-spec) so repeated calls never re-trace.
+``generate_reference()`` keeps the seed per-token Python loop (one jit
+dispatch per token) as the equivalence oracle and benchmark baseline; both
+report per-round message sizes and the analytic communication latency of
+the unreliable protocol (paper §III-B), and both time *compute* — the
+timed regions end in ``jax.block_until_ready``, not async dispatch.
 """
 
 from __future__ import annotations
@@ -22,6 +27,41 @@ from repro.core import ChannelConfig, comtune
 from repro.core.compression import Compressor, PCASpec, QuantSpec
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import cache as cache_lib, lm
+from repro.serve import default_engine
+
+
+def _override_link(cfg, loss_rate=None, channel=None):
+    if loss_rate is None and channel is None:
+        return cfg
+    import dataclasses
+
+    updates = {}
+    if loss_rate is not None:
+        updates["loss_rate"] = loss_rate
+    if channel is not None:
+        updates["channel"] = channel
+    return cfg.with_updates(link=dataclasses.replace(cfg.link, **updates))
+
+
+def _link_accounting(cfg, batch: int) -> dict:
+    """Per-round message size + analytic link latency (paper §III-B)."""
+    channel_cfg = ChannelConfig(loss_rate=cfg.link.loss_rate)
+    spec = comtune.LinkSpec(
+        loss_rate=cfg.link.loss_rate,
+        compressor=_accounting_compressor(cfg),
+        channel=cfg.link.channel,
+        channel_params=tuple(cfg.link.channel_params),
+        fec_k=cfg.link.fec_k,
+        fec_m=cfg.link.fec_m,
+        fec_kind=cfg.link.fec_kind,
+    )
+    return {
+        "link_latency_s_per_round": comtune.di_latency_s(
+            spec, cfg.d_model, batch, channel_cfg
+        ),
+        "message_kb_per_token": comtune.message_bytes(spec, cfg.d_model)
+        * batch / 1e3,
+    }
 
 
 def generate(
@@ -33,57 +73,74 @@ def generate(
     key=None,
     greedy: bool = True,
     channel: str | None = None,
+    temperature: float = 1.0,
+    engine=None,
 ):
-    """Returns (generated (B, num_tokens), timings dict)."""
+    """Returns (generated (B, num_tokens), timings dict).
+
+    Greedy output is token-for-token identical to ``generate_reference``
+    under the same key; the engine's compile cache makes repeated calls
+    with the same signature trace exactly once (``timings['traces']``).
+    """
+    cfg = _override_link(cfg, loss_rate=loss_rate, channel=channel)
+    engine = engine or default_engine()
+    tokens, timings = engine.generate(
+        params, cfg, prompts, num_tokens,
+        key=key, greedy=greedy, temperature=temperature,
+    )
+    timings.update(_link_accounting(cfg, prompts.shape[0]))
+    return tokens, timings
+
+
+def generate_reference(
+    params,
+    cfg,
+    prompts: jax.Array,            # (B, S_prompt) int32
+    num_tokens: int,
+    loss_rate: float | None = None,
+    key=None,
+    greedy: bool = True,
+    channel: str | None = None,
+):
+    """The seed per-token serving loop (one jit dispatch per token).
+
+    Kept as the scan engine's equivalence oracle and the decode-bench
+    baseline.  Unlike the seed, the timed regions block on the result:
+    ``prefill_s`` / ``decode_s_per_token`` measure compute, not async
+    dispatch.
+    """
+    assert greedy, "the reference loop is the greedy-equivalence oracle"
     key = key if key is not None else jax.random.PRNGKey(0)
     b, s_prompt = prompts.shape
     max_seq = s_prompt + num_tokens
-    if loss_rate is not None or channel is not None:
-        import dataclasses
-
-        updates = {}
-        if loss_rate is not None:
-            updates["loss_rate"] = loss_rate
-        if channel is not None:
-            updates["channel"] = channel
-        cfg = cfg.with_updates(link=dataclasses.replace(cfg.link, **updates))
+    cfg = _override_link(cfg, loss_rate=loss_rate, channel=channel)
     prefill = jax.jit(make_prefill_step(cfg))
     step = jax.jit(make_serve_step(cfg))
 
     cache = cache_lib.init_cache(cfg, b, max_seq)
     key, sub = jax.random.split(key)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill(params, {"tokens": prompts}, cache, sub)
-    t_prefill = time.time() - t0
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
 
     out = []
     token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(num_tokens):
         out.append(token)
         key, sub = jax.random.split(key)
         logits, cache = step(params, token, cache, jnp.int32(s_prompt + i), sub)
         token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    t_decode = time.time() - t0
+    jax.block_until_ready(token)
+    t_decode = time.perf_counter() - t0
 
-    # Communication accounting (paper §III-B).
-    channel_cfg = ChannelConfig(loss_rate=cfg.link.loss_rate)
-    spec = comtune.LinkSpec(
-        loss_rate=cfg.link.loss_rate,
-        compressor=_accounting_compressor(cfg),
-        channel=cfg.link.channel,
-        channel_params=tuple(cfg.link.channel_params),
-        fec_k=cfg.link.fec_k,
-        fec_m=cfg.link.fec_m,
-        fec_kind=cfg.link.fec_kind,
-    )
-    per_round_s = comtune.di_latency_s(spec, cfg.d_model, b, channel_cfg)
     timings = {
         "prefill_s": t_prefill,
         "decode_s_per_token": t_decode / max(1, num_tokens),
-        "link_latency_s_per_round": per_round_s,
-        "message_kb_per_token": comtune.message_bytes(spec, cfg.d_model) * b / 1e3,
+        "tokens_per_s": (b * num_tokens) / max(t_decode, 1e-9),
     }
+    timings.update(_link_accounting(cfg, b))
     return jnp.concatenate(out, axis=1), timings
 
 

@@ -98,6 +98,70 @@ def make_serve_step(cfg: ModelConfig, link_mode: str = "serve", mesh=None):
     return serve_step
 
 
+def make_generate_fn(
+    cfg: ModelConfig,
+    num_tokens: int,
+    link_mode: str = "serve",
+    greedy: bool = True,
+    temperature: float = 1.0,
+    mesh=None,
+):
+    """Whole-generation step: prefill + ``lax.scan`` over ``num_tokens`` DI
+    decode rounds, all inside one traceable function.
+
+    The scan body reproduces the legacy per-token Python loop exactly —
+    same ``jax.random.split`` chain, same argmax, same lossy-link round per
+    step — so greedy output is token-for-token identical to the seed loop
+    under identical keys (tests/test_serve_engine.py).  Sampling mode draws
+    one extra subkey per step for ``jax.random.categorical``.
+
+    Returns ``generate_fn(params, prompts, cache, key) -> (tokens, cache)``
+    with ``tokens`` of shape (B, num_tokens); the returned cache is the
+    final decode state (aliased to the donated input cache when jitted with
+    ``donate_argnums``).
+    """
+    prefill = make_prefill_step(cfg, link_mode=link_mode, mesh=mesh)
+    step = make_serve_step(cfg, link_mode=link_mode, mesh=mesh)
+
+    def select(logits, key):
+        if greedy:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / jnp.float32(max(temperature, 1e-6))
+        return jax.random.categorical(key, scaled, axis=-1)[:, None].astype(
+            jnp.int32
+        )
+
+    def generate_fn(params, prompts, cache, key):
+        s_prompt = prompts.shape[1]
+        key, sub = jax.random.split(key)
+        logits, cache = prefill(params, {"tokens": prompts}, cache, sub)
+        if greedy:
+            token = select(logits, None)
+        else:
+            key, ks = jax.random.split(key)
+            token = select(logits, ks)
+
+        def body(carry, i):
+            key, token, cache = carry
+            if greedy:
+                key, sub = jax.random.split(key)
+                ks = None
+            else:
+                key, sub, ks = jax.random.split(key, 3)
+            logits, cache = step(params, token, cache, s_prompt + i, sub)
+            nxt = select(logits, ks)
+            # Emit the token *fed into* this round (the legacy loop appends
+            # before stepping), so output[0] is the prefill-selected token.
+            return (key, nxt, cache), token[:, 0]
+
+        (_, _, cache), toks = jax.lax.scan(
+            body, (key, token, cache), jnp.arange(num_tokens, dtype=jnp.int32)
+        )
+        return jnp.moveaxis(toks, 0, 1), cache
+
+    return generate_fn
+
+
 # ---------------------------------------------------------------------------
 # Abstract inputs (ShapeDtypeStruct stand-ins; no allocation)
 # ---------------------------------------------------------------------------

@@ -66,6 +66,9 @@ def train(
         params, opt_state, metrics = step_fn(params, opt_state, b, sub)
         losses.append(float(metrics["loss"]))
         if step % log_every == 0 or step == 1:
+            # float(loss) above only syncs on the loss; block on the full
+            # step output so s/step measures compute, not async dispatch.
+            jax.block_until_ready((params, opt_state))
             print(
                 f"step {step:5d} loss {losses[-1]:.4f} "
                 f"grad_norm {float(metrics['grad_norm']):.3f} "

@@ -56,3 +56,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
 def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
     """ShapeDtypeStruct skeleton of the cache (for dry-run input_specs)."""
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
+    """Total decode-state footprint in bytes (no allocation) — what the
+    serve engine's donated-cache scan carries, reported by decode_bench."""
+    import math
+
+    return sum(
+        math.prod(leaf.shape) * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(cache_spec(cfg, batch, max_seq))
+    )

@@ -41,8 +41,10 @@ from repro.net.fec import (  # noqa: F401
     residual_loss_rate,
 )
 from repro.net.evalhook import (  # noqa: F401
+    accuracy_per_request_masks,
     accuracy_vs_delivery_curve,
     accuracy_with_packet_masks,
+    make_request_eval_fn,
     train_tiny_model,
 )
 from repro.net.protocol import (  # noqa: F401

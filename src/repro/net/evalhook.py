@@ -43,6 +43,10 @@ class TinyModel:
     state: dict
     x_test: np.ndarray
     y_test: np.ndarray
+    # Lazily cached device-half outputs on x_test (see split_activations);
+    # the simulator's model-in-the-loop path evaluates per served batch and
+    # must not recompute the device half every flush.
+    acts: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
 
     @property
     def split_dim(self) -> int:
@@ -103,32 +107,52 @@ def train_tiny_model(
 
 
 def split_activations(model: TinyModel) -> np.ndarray:
-    a, _ = cnn.forward_device(
-        model.params, model.state, jnp.asarray(model.x_test), TINY_CFG
-    )
-    return np.asarray(a)
+    """Device-half outputs on the test set, cached on the model."""
+    if model.acts is None:
+        a, _ = cnn.forward_device(
+            model.params, model.state, jnp.asarray(model.x_test), TINY_CFG
+        )
+        model.acts = np.asarray(a)
+    return model.acts
 
 
 def _expand_packet_masks(
     pkt_masks: np.ndarray,               # (B, n_packets) bool
     num_elements: int,
     elements_per_packet: int,
-    key: jax.Array,
+    key: Optional[jax.Array] = None,
     shuffle: bool = True,
+    keys: Optional[jax.Array] = None,    # (B, 2) explicit per-sample keys
 ) -> np.ndarray:
     """(B, num_elements) float32 element masks with per-sample interleaving
     — vmapped over the single shared Eq. 2 implementation in
     ``repro.net.channels`` so the eval path cannot drift from what
-    ``channel_link`` simulates."""
+    ``channel_link`` simulates.  Pass ``keys`` for per-sample keys that are
+    stable regardless of batch composition (the per-request eval path);
+    otherwise the interleaving keys are split from ``key``."""
     from repro.net.channels import element_mask_from_packets
 
-    keys = jax.random.split(key, pkt_masks.shape[0])
+    if keys is None:
+        keys = jax.random.split(key, pkt_masks.shape[0])
     fn = jax.vmap(
         lambda m, k: element_mask_from_packets(
             m, num_elements, elements_per_packet, k, shuffle
         )
     )
     return np.asarray(fn(jnp.asarray(pkt_masks, jnp.float32), keys))
+
+
+def _masked_server_predictions(
+    model: TinyModel, a: np.ndarray, masks: np.ndarray
+) -> np.ndarray:
+    """Apply element masks at the split with realized-fraction compensation
+    (unbiased for partial delivery, the adaptive variant of Eq. 11) and run
+    the server half; returns predicted classes (B,)."""
+    frac = np.maximum(masks.mean(axis=1, keepdims=True), 1e-3)
+    logits, _ = cnn.forward_server(
+        model.params, model.state, jnp.asarray(a * masks / frac), TINY_CFG
+    )
+    return np.asarray(jnp.argmax(logits, -1))
 
 
 def accuracy_with_packet_masks(
@@ -145,12 +169,68 @@ def accuracy_with_packet_masks(
     masks = _expand_packet_masks(
         pkt_masks, a.shape[1], elements_per_packet, jax.random.PRNGKey(seed)
     )
-    frac = np.maximum(masks.mean(axis=1, keepdims=True), 1e-3)
-    a_rx = a * masks / frac
-    logits, _ = cnn.forward_server(
-        model.params, model.state, jnp.asarray(a_rx), TINY_CFG
+    pred = _masked_server_predictions(model, a, masks)
+    return float((pred == model.y_test).mean())
+
+
+def accuracy_per_request_masks(
+    model: TinyModel,
+    pkt_masks: np.ndarray,               # (R, n_packets) bool
+    rids: np.ndarray,                    # (R,) request ids
+    elements_per_packet: Optional[int] = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """Per-request correctness under realized packet delivery masks.
+
+    The DI semantics of the multi-client simulator: request ``rid`` carries
+    ONE sample's split activation (test sample ``rid % n_test``), its
+    uplink's realized per-packet delivery mask is expanded to an element
+    mask with the paper's interleaving (keyed per-rid, so results don't
+    depend on how requests were batched) and applied at the split with
+    realized-fraction compensation; the server half classifies.  Returns a
+    bool (R,) array — mean it for accuracy under load.
+    """
+    pkt_masks = np.asarray(pkt_masks, dtype=bool)
+    rids = np.asarray(rids, dtype=np.int64)
+    assert pkt_masks.ndim == 2 and pkt_masks.shape[0] == rids.shape[0]
+    a_all = split_activations(model)
+    n_test = a_all.shape[0]
+    idx = rids % n_test
+    a = a_all[idx]
+    n_packets = pkt_masks.shape[1]
+    if elements_per_packet is None:
+        # The request's message is the whole split vector spread over its
+        # n_packets uplink packets.
+        elements_per_packet = -(-a.shape[1] // n_packets)
+    # Interleaving keyed per-rid so a request's element mask doesn't depend
+    # on how the server happened to batch it.
+    base = jax.random.PRNGKey(seed)
+    keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(jnp.asarray(rids))
+    masks = _expand_packet_masks(
+        pkt_masks, a.shape[1], elements_per_packet, keys=keys
     )
-    return float((jnp.argmax(logits, -1) == jnp.asarray(model.y_test)).mean())
+    pred = _masked_server_predictions(model, a, masks)
+    return pred == model.y_test[idx]
+
+
+def make_request_eval_fn(
+    model: TinyModel,
+    n_packets: int,
+    elements_per_packet: Optional[int] = None,
+    seed: int = 0,
+):
+    """Bind ``accuracy_per_request_masks`` for ``run_sim``'s
+    model-in-the-loop mode: ``(pkt_masks, rids) -> correct (R,) bool``."""
+    if elements_per_packet is None:
+        elements_per_packet = -(-TINY_CFG.split_activation_dim // n_packets)
+
+    def fn(pkt_masks: np.ndarray, rids: np.ndarray) -> np.ndarray:
+        return accuracy_per_request_masks(
+            model, pkt_masks, rids,
+            elements_per_packet=elements_per_packet, seed=seed,
+        )
+
+    return fn
 
 
 def accuracy_vs_delivery_curve(

@@ -1,18 +1,36 @@
 """Event-driven multi-client serving simulator.
 
 N device clients share one edge server over per-client lossy links.  Each
-client generates split-inference requests as a Poisson process; a request's
-uplink (the split activation, ``n_packets`` packets) runs through the
-client's protocol policy over its *stateful* channel (burst state carries
-across requests), then queues at the server, which serves in batches with a
-configurable compute-time model.  The simulator is a classic future-event-
-list design (heapq) — no wall-clock, fully deterministic given the seed.
+client generates split-inference requests as a Poisson process (or an
+explicit hand-scheduled arrival list); a request's uplink (the split
+activation, ``n_packets`` packets) runs through the client's protocol
+policy over its *stateful* channel (burst state carries across requests),
+then queues at the server, which serves in batches with a configurable
+compute-time model.  The simulator is a classic future-event-list design
+(heapq) — no wall-clock, fully deterministic given the seed.
+
+Correctness notes (regression-tested in tests/test_net.py):
+
+* The protocol round (and therefore the channel draw) happens at *uplink
+  start* — a dedicated ``_UPLINK_START`` event fired when the client's
+  half-duplex radio actually frees up — NOT at arrival.  Requests that
+  queue behind a busy radio draw their packet masks in transmission order,
+  so stateful (Gilbert–Elliott / fading / trace) channels evolve their
+  burst state in the order packets actually hit the air.
+* The reported ``duration_s`` horizon covers every *finished* request —
+  served or dropped — so a simulation whose tail is all deadline drops no
+  longer over-reports ``throughput_rps``.
 
 Outputs: throughput, p50/p99 end-to-end round latency, delivered-fraction
-statistics, and (optionally) accuracy under load via a caller-provided
-``accuracy_fn(delivered_fraction) -> accuracy`` — typically an
-interpolation of the COMtune model's measured accuracy-vs-loss curve, so
-the serving simulation and the learning stack stay coupled.
+statistics, and accuracy under load via either
+
+* ``accuracy_fn(delivered_fraction) -> accuracy`` — the offline
+  interpolation-curve bridge (``accuracy_curve_fn``), or
+* ``model_in_the_loop=True`` — each served batch's realized per-request
+  packet delivery masks are collected and pushed through the server half
+  of the real COMtune model (``repro.net.evalhook``), so accuracy under
+  load reflects burst patterns, batching, and FEC recovery instead of an
+  interpolated mean.
 
 Conservation invariant (asserted in tests): every arrived request is
 eventually counted exactly once as served or dropped (a request is dropped
@@ -22,6 +40,7 @@ message, the deadline case of ARQ/FEC policies).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import itertools
@@ -55,6 +74,7 @@ class _Request:
     t_uplink_done: float = 0.0
     delivered_fraction: float = 0.0
     t_done: float = 0.0
+    pkt_mask: Optional[np.ndarray] = None   # bool (n_packets,) realized delivery
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,13 +90,15 @@ class SimReport:
     mean_delivered_fraction: float
     mean_batch_size: float
     accuracy_under_load: Optional[float] = None
+    accuracy_mode: Optional[str] = None   # "curve" | "model" | None
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
 
-# Event kinds, ordered so simultaneous events resolve deterministically.
-_ARRIVAL, _UPLINK_DONE, _SERVER_DONE = 0, 1, 2
+# Event kinds, ordered so simultaneous events resolve deterministically:
+# arrivals enqueue before radios start, radios finish before the server.
+_ARRIVAL, _UPLINK_START, _UPLINK_DONE, _SERVER_DONE = 0, 1, 2, 3
 
 
 def run_sim(
@@ -85,11 +107,28 @@ def run_sim(
     protocol: Optional[_ProtocolBase] = None,
     channel_cfg: Optional[link_lib.ChannelConfig] = None,
     accuracy_fn: Optional[Callable[[float], float]] = None,
+    arrivals: Optional[Sequence[Tuple[float, int]]] = None,
+    model_in_the_loop: bool = False,
+    model=None,
+    request_eval_fn: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None,
 ) -> SimReport:
-    """Run one simulation.  ``channels`` gives one stateful channel per
-    client (default: IID at 10% for all); ``protocol`` is shared (default:
-    unreliable); ``channel_cfg`` sets packet slot time (default: paper's
-    100 B @ 9 Mbit/s)."""
+    """Run one simulation.
+
+    ``channels`` gives one stateful channel per client (default: IID at 10%
+    for all); ``protocol`` is shared (default: unreliable); ``channel_cfg``
+    sets packet slot time (default: paper's 100 B @ 9 Mbit/s).
+
+    ``arrivals`` optionally replaces the Poisson processes with an explicit
+    ``[(t, client), ...]`` schedule (trace-driven workloads; also how the
+    ordering tests hand-schedule contention).
+
+    ``model_in_the_loop=True`` evaluates accuracy under load from the
+    realized per-request packet masks through the real model:
+    ``request_eval_fn(pkt_masks (R, n_packets) bool, rids (R,)) -> correct
+    (R,) bool`` is used if given, else built from ``model`` (default: the
+    lazily trained ``evalhook`` tiny COMtune CNN, request rid -> test
+    sample rid mod n_test).
+    """
     rng = np.random.RandomState(cfg.seed)
     channel_cfg = channel_cfg or link_lib.ChannelConfig()
     protocol = protocol or UnreliableProtocol()
@@ -98,6 +137,7 @@ def run_sim(
     assert len(channels) == cfg.n_clients
     ch_state = [ch.init_state(rng) for ch in channels]
     slot_t = channel_cfg.slot_time_s()
+    collect_masks = model_in_the_loop
 
     events: List[Tuple[float, int, int, object]] = []  # (t, kind, seq, payload)
     seq = itertools.count()
@@ -105,21 +145,31 @@ def run_sim(
     def push(t: float, kind: int, payload) -> None:
         heapq.heappush(events, (t, kind, next(seq), payload))
 
-    # Seed one arrival per client; each arrival schedules the next.  The
-    # window check matches the one applied to subsequent arrivals.
-    for c in range(cfg.n_clients):
-        t0 = rng.exponential(1.0 / cfg.arrival_rate_hz)
-        if t0 < cfg.duration_s:
-            push(t0, _ARRIVAL, c)
+    if arrivals is not None:
+        for t, c in arrivals:
+            assert 0 <= c < cfg.n_clients, (t, c)
+            push(float(t), _ARRIVAL, c)
+    else:
+        # Seed one arrival per client; each arrival schedules the next.  The
+        # window check matches the one applied to subsequent arrivals.
+        for c in range(cfg.n_clients):
+            t0 = rng.exponential(1.0 / cfg.arrival_rate_hz)
+            if t0 < cfg.duration_s:
+                push(t0, _ARRIVAL, c)
 
-    # Per-client uplink is half-duplex: requests on one client serialize.
-    client_free_at = np.zeros(cfg.n_clients)
+    # Per-client uplink is half-duplex: requests on one client serialize
+    # through a FIFO; the channel is drawn when transmission starts, not
+    # at arrival, so burst state advances in on-air order.
+    client_pending = [collections.deque() for _ in range(cfg.n_clients)]
+    client_busy = [False] * cfg.n_clients
     server_queue: List[_Request] = []
     server_busy = False
 
     arrived = served = dropped = 0
     done: List[_Request] = []
+    served_batches: List[List[_Request]] = []
     batch_sizes: List[int] = []
+    t_finish = 0.0          # last served-or-dropped completion time
     rid = itertools.count()
 
     def start_batch(now: float) -> None:
@@ -137,25 +187,41 @@ def run_sim(
             c = payload
             arrived += 1
             req = _Request(rid=next(rid), client=c, t_arrival=now)
-            # Uplink starts when the client's radio is free.
-            t_start = max(now, client_free_at[c])
+            client_pending[c].append(req)
+            # Kick the radio only on the empty->nonempty transition: with
+            # the radio idle there is exactly one outstanding _UPLINK_START
+            # per client, even for simultaneous arrivals (the busy flag
+            # flips when that event is *processed*, not when scheduled).
+            if not client_busy[c] and len(client_pending[c]) == 1:
+                push(now, _UPLINK_START, c)
+            if arrivals is None:
+                # Next arrival for this client (within the arrival window).
+                t_next = now + rng.exponential(1.0 / cfg.arrival_rate_hz)
+                if t_next < cfg.duration_s:
+                    push(t_next, _ARRIVAL, c)
+        elif kind == _UPLINK_START:
+            c = payload
+            req = client_pending[c].popleft()
+            client_busy[c] = True
             result, ch_state[c] = protocol.run_round(
                 rng, channels[c], ch_state[c], cfg.n_packets
             )
-            t_up = t_start + result.slots * slot_t
-            client_free_at[c] = t_up
+            t_up = now + result.slots * slot_t
             req.t_uplink_done = t_up
             req.delivered_fraction = result.delivered_fraction
+            if collect_masks:
+                req.pkt_mask = np.asarray(result.delivered, dtype=bool).copy()
             push(t_up, _UPLINK_DONE, req)
-            # Next arrival for this client (within the arrival window).
-            t_next = now + rng.exponential(1.0 / cfg.arrival_rate_hz)
-            if t_next < cfg.duration_s:
-                push(t_next, _ARRIVAL, c)
         elif kind == _UPLINK_DONE:
             req = payload
+            c = req.client
+            client_busy[c] = False
+            if client_pending[c]:
+                push(now, _UPLINK_START, c)
             if req.delivered_fraction < cfg.min_delivered_fraction:
                 dropped += 1
                 req.t_done = now
+                t_finish = max(t_finish, now)
                 continue
             server_queue.append(req)
             if not server_busy:
@@ -166,12 +232,21 @@ def run_sim(
                 req.t_done = now
                 served += 1
                 done.append(req)
+            t_finish = max(t_finish, now)
+            if collect_masks and batch:
+                served_batches.append(list(batch))
             server_busy = False
             if server_queue:
                 start_batch(now)
 
     assert arrived == served + dropped, (arrived, served, dropped)
 
+    # The horizon covers every finished request, served OR dropped — a
+    # tail of deadline drops extends duration and dilutes throughput.
+    horizon = max(t_finish, cfg.duration_s)
+
+    acc: Optional[float] = None
+    acc_mode: Optional[str] = None
     if done:
         lat = np.array([r.t_done - r.t_arrival for r in done])
         frac = np.array([r.delivered_fraction for r in done])
@@ -179,15 +254,16 @@ def run_sim(
         p99 = float(np.percentile(lat, 99))
         mean = float(lat.mean())
         mfrac = float(frac.mean())
-        acc = (
-            float(np.mean([accuracy_fn(f) for f in frac]))
-            if accuracy_fn is not None else None
-        )
-        horizon = max(max(r.t_done for r in done), cfg.duration_s)
+        if model_in_the_loop:
+            acc = _model_in_the_loop_accuracy(
+                served_batches, cfg.n_packets, model, request_eval_fn
+            )
+            acc_mode = "model"
+        elif accuracy_fn is not None:
+            acc = float(np.mean([accuracy_fn(f) for f in frac]))
+            acc_mode = "curve"
     else:
         p50 = p99 = mean = mfrac = 0.0
-        acc = None
-        horizon = cfg.duration_s
     return SimReport(
         arrived=arrived,
         served=served,
@@ -200,7 +276,43 @@ def run_sim(
         mean_delivered_fraction=mfrac,
         mean_batch_size=float(np.mean(batch_sizes)) if batch_sizes else 0.0,
         accuracy_under_load=acc,
+        accuracy_mode=acc_mode,
     )
+
+
+_EVAL_CHUNK = 256   # requests per model call when flushing collected masks
+
+
+def _model_in_the_loop_accuracy(
+    served_batches: Sequence[Sequence[_Request]],
+    n_packets: int,
+    model,
+    request_eval_fn,
+) -> float:
+    """Mean per-request correctness over the served batches' realized
+    packet masks.  Masks are collected batch-by-batch as the server
+    completes them and flushed through the model in bounded chunks."""
+    reqs = [r for batch in served_batches for r in batch]
+    if not reqs:
+        return 0.0
+    if request_eval_fn is None:
+        # Lazy import: the simulator core stays numpy-only unless the
+        # model-in-the-loop path is actually requested.
+        from repro.net import evalhook
+
+        model = model if model is not None else evalhook.train_tiny_model()
+        request_eval_fn = evalhook.make_request_eval_fn(model, n_packets)
+    masks = np.stack([r.pkt_mask for r in reqs])
+    rids = np.array([r.rid for r in reqs], dtype=np.int64)
+    correct: List[np.ndarray] = []
+    for i in range(0, len(reqs), _EVAL_CHUNK):
+        correct.append(
+            np.asarray(
+                request_eval_fn(masks[i : i + _EVAL_CHUNK],
+                                rids[i : i + _EVAL_CHUNK])
+            )
+        )
+    return float(np.concatenate(correct).mean())
 
 
 def accuracy_curve_fn(

@@ -1,0 +1,16 @@
+"""repro.serve — the serving engine layer.
+
+``DecodeEngine`` turns the step builders in ``repro.launch.steps`` into a
+production-shaped serving path: one jit-compiled ``lax.scan`` program per
+(arch, batch, prompt_len, num_tokens, link-spec) signature, cached so
+repeated ``generate()`` calls never re-trace, with donated decode caches
+and compute-accurate (``block_until_ready``) timing.
+"""
+
+from repro.serve.engine import (  # noqa: F401
+    CompiledGenerate,
+    DecodeEngine,
+    default_engine,
+    engine_generate,
+    generate_key,
+)

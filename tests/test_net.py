@@ -394,3 +394,203 @@ class TestLossRateOneRegression:
         )
         assert bool(jnp.all(jnp.isfinite(y)))
         assert bool(jnp.all(y == 0.0))
+
+
+class _RecordingChannel:
+    """Channel wrapper logging the order in which clients' channels draw —
+    the observable for the uplink-start (vs arrival) ordering fix."""
+
+    def __init__(self, inner, label, log):
+        self.inner = inner
+        self.label = label
+        self.log = log
+
+    @property
+    def stationary_loss_rate(self):
+        return self.inner.stationary_loss_rate
+
+    def init_state(self, rng):
+        return self.inner.init_state(rng)
+
+    def step(self, rng, state, n_packets):
+        self.log.append(self.label)
+        return self.inner.step(rng, state, n_packets)
+
+
+class TestSimulatorFixes:
+    """Regression tests for the serve/simulator correctness fixes: channel
+    draws at uplink start, horizon covering dropped tails, and the
+    model-in-the-loop accuracy path."""
+
+    def test_channel_draw_order_follows_uplink_start_not_arrival(self):
+        """Hand-scheduled two-client trace: client 0's second request
+        ARRIVES before client 1's request but its uplink STARTS after
+        (radio busy) — the stateful-channel draws must happen in on-air
+        order [c0, c1, c0], not arrival order [c0, c0, c1]."""
+        from repro.core.link import ChannelConfig
+
+        channel_cfg = ChannelConfig()
+        slot_t = channel_cfg.slot_time_s()
+        n_packets = 50
+        uplink_s = n_packets * slot_t
+        log = []
+        channels = [
+            _RecordingChannel(IIDChannel(0.0), c, log) for c in range(2)
+        ]
+        # c0 req1 occupies c0's radio over [0, uplink_s); c0 req2 arrives
+        # inside that window; c1's request arrives after c0 req2 but with a
+        # free radio, so it transmits first.
+        arrivals = [(0.0, 0), (0.4 * uplink_s, 0), (0.6 * uplink_s, 1)]
+        rep = run_sim(
+            SimConfig(n_clients=2, duration_s=1.0, n_packets=n_packets,
+                      min_delivered_fraction=0.0),
+            channels=channels,
+            channel_cfg=channel_cfg,
+            arrivals=arrivals,
+        )
+        assert rep.arrived == 3 and rep.served == 3
+        assert log == [0, 1, 0], log
+
+    def test_queued_uplinks_serialize_back_to_back(self):
+        """A queued request starts exactly when the radio frees up."""
+        from repro.core.link import ChannelConfig
+
+        channel_cfg = ChannelConfig()
+        slot_t = channel_cfg.slot_time_s()
+        n_packets = 20
+        rep = run_sim(
+            SimConfig(n_clients=1, duration_s=1.0, n_packets=n_packets,
+                      min_delivered_fraction=0.0, server_base_s=0.0,
+                      server_per_item_s=0.0),
+            channels=[IIDChannel(0.0)],
+            channel_cfg=channel_cfg,
+            arrivals=[(0.0, 0), (0.0, 0)],
+        )
+        # Request 2 waits for request 1's full uplink, then transmits:
+        # latencies are exactly [uplink, 2 * uplink] (instant server), so
+        # the mean is 1.5 uplinks.
+        assert rep.served == 2
+        np.testing.assert_allclose(
+            rep.latency_mean_s, 1.5 * n_packets * slot_t, rtol=1e-6
+        )
+
+    def test_horizon_covers_dropped_tail(self):
+        """A simulation whose last events are deadline drops must extend
+        duration_s to the drops' completion and dilute throughput_rps."""
+        from repro.core.link import ChannelConfig
+
+        channel_cfg = ChannelConfig()
+        slot_t = channel_cfg.slot_time_s()
+        n_packets = 400
+        cfg = SimConfig(n_clients=2, duration_s=0.05, n_packets=n_packets,
+                        min_delivered_fraction=0.2)
+        t_arr = 0.049
+        rep = run_sim(
+            cfg,
+            channels=[IIDChannel(1.0), IIDChannel(1.0)],
+            channel_cfg=channel_cfg,
+            arrivals=[(t_arr, 0), (t_arr, 1)],
+        )
+        assert rep.arrived == 2 and rep.dropped == 2 and rep.served == 0
+        t_drop_done = t_arr + n_packets * slot_t
+        assert t_drop_done > cfg.duration_s  # the scenario has a real tail
+        np.testing.assert_allclose(rep.duration_s, t_drop_done, rtol=1e-6)
+        assert rep.throughput_rps == 0.0
+
+    def test_horizon_dilutes_throughput_with_served_head(self):
+        """Served head + all-drop tail: throughput divides by the full
+        horizon (last drop), not the served-only window."""
+        from repro.core.link import ChannelConfig
+
+        channel_cfg = ChannelConfig()
+        slot_t = channel_cfg.slot_time_s()
+        n_packets = 200
+        cfg = SimConfig(n_clients=2, duration_s=0.01, n_packets=n_packets,
+                        min_delivered_fraction=0.5)
+        rep = run_sim(
+            cfg,
+            channels=[IIDChannel(0.0), IIDChannel(1.0)],
+            channel_cfg=channel_cfg,
+            arrivals=[(0.0, 0), (0.009, 1)],
+        )
+        assert rep.served == 1 and rep.dropped == 1
+        t_tail = 0.009 + n_packets * slot_t
+        np.testing.assert_allclose(rep.duration_s, t_tail, rtol=1e-6)
+        np.testing.assert_allclose(rep.throughput_rps, 1.0 / t_tail, rtol=1e-6)
+
+    def test_conservation_with_drop_tail(self):
+        for seed in range(3):
+            rep = run_sim(
+                SimConfig(n_clients=6, arrival_rate_hz=6.0, duration_s=1.0,
+                          seed=seed, min_delivered_fraction=0.9),
+                channels=[GilbertElliottChannel.from_target(0.6)
+                          for _ in range(6)],
+            )
+            assert rep.arrived == rep.served + rep.dropped
+            assert rep.duration_s >= 1.0
+
+    def test_model_in_the_loop_uses_realized_masks(self):
+        """The injected request_eval_fn sees one realized (served) mask per
+        request with the configured packet count; accuracy is its mean."""
+        seen = {"masks": [], "rids": []}
+
+        def eval_fn(masks, rids):
+            seen["masks"].append(np.asarray(masks))
+            seen["rids"].append(np.asarray(rids))
+            return np.asarray(rids) % 2 == 0
+
+        cfg = SimConfig(n_clients=4, arrival_rate_hz=5.0, duration_s=1.0,
+                        seed=3, n_packets=17, min_delivered_fraction=0.0)
+        rep = run_sim(
+            cfg,
+            channels=[GilbertElliottChannel.from_target(0.3)
+                      for _ in range(4)],
+            model_in_the_loop=True,
+            request_eval_fn=eval_fn,
+        )
+        assert rep.accuracy_mode == "model"
+        masks = np.concatenate(seen["masks"])
+        rids = np.concatenate(seen["rids"])
+        assert masks.shape == (rep.served, cfg.n_packets)
+        assert masks.dtype == bool
+        # Bursty channel at 30% loss: realized masks are non-trivial.
+        assert 0.0 < masks.mean() < 1.0
+        np.testing.assert_allclose(
+            rep.accuracy_under_load, float(np.mean(rids % 2 == 0))
+        )
+
+    def test_model_in_the_loop_lossless_equals_clean_accuracy(self):
+        """With a loss-free channel the realized-mask accuracy equals the
+        model's clean per-sample accuracy on the served request ids."""
+        from repro.net import evalhook
+
+        model = evalhook.train_tiny_model(
+            steps=30, n_train=200, n_test=80, seed=1
+        )
+        cfg = SimConfig(n_clients=3, arrival_rate_hz=4.0, duration_s=1.0,
+                        seed=5, n_packets=11)
+        rep = run_sim(
+            cfg,
+            channels=[IIDChannel(0.0) for _ in range(3)],
+            model_in_the_loop=True,
+            model=model,
+        )
+        assert rep.served == rep.arrived and rep.served > 0
+        expected = float(
+            evalhook.accuracy_per_request_masks(
+                model,
+                np.ones((rep.served, cfg.n_packets), dtype=bool),
+                np.arange(rep.served),
+            ).mean()
+        )
+        np.testing.assert_allclose(rep.accuracy_under_load, expected)
+
+    def test_accuracy_curve_mode_still_reported(self):
+        fn = accuracy_curve_fn([0.0, 1.0], [0.1, 0.9])
+        rep = run_sim(
+            SimConfig(n_clients=4, arrival_rate_hz=3.0, duration_s=1.0,
+                      seed=2),
+            accuracy_fn=fn,
+        )
+        assert rep.accuracy_mode == "curve"
+        assert rep.accuracy_under_load is not None

@@ -1,0 +1,185 @@
+"""repro.serve engine: scan-compiled decode must be token-for-token
+identical to the seed per-token loop, trace exactly once per signature,
+and report compute (blocked) — not async-dispatch — timings."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.launch import serve as serve_mod
+from repro.launch.serve import generate, generate_reference
+from repro.models import lm
+from repro.serve import DecodeEngine, default_engine
+
+
+def _setup(arch="qwen1.5-0.5b", batch=2, s_prompt=6):
+    cfg = ARCHITECTURES[arch].reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, s_prompt), 0, cfg.vocab_size, jnp.int32
+    )
+    return cfg, params, prompts
+
+
+class TestScanEquivalence:
+    @pytest.mark.parametrize("channel", ["iid", "ge"])
+    def test_matches_seed_per_token_loop(self, channel):
+        """Same PRNG key -> identical tokens: the scan body replicates the
+        legacy loop's split chain and per-round lossy link exactly."""
+        cfg, params, prompts = _setup()
+        key = jax.random.PRNGKey(42)
+        ref, _ = generate_reference(
+            params, cfg, prompts, 5, loss_rate=0.3, key=key, channel=channel
+        )
+        eng, _ = generate(
+            params, cfg, prompts, 5, loss_rate=0.3, key=key, channel=channel,
+            engine=DecodeEngine(),
+        )
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(eng))
+
+    def test_matches_across_keys_lossless(self):
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        for seed in (0, 7):
+            key = jax.random.PRNGKey(seed)
+            ref, _ = generate_reference(
+                params, cfg, prompts, 4, loss_rate=0.0, key=key
+            )
+            eng, _ = generate(
+                params, cfg, prompts, 4, loss_rate=0.0, key=key, engine=engine
+            )
+            np.testing.assert_array_equal(np.asarray(ref), np.asarray(eng))
+        # Two calls, same signature: still a single trace.
+        assert engine.total_traces() == 1
+
+    def test_sampling_mode_shape_and_determinism(self):
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        key = jax.random.PRNGKey(3)
+        a, _ = engine.generate(
+            params, cfg, prompts, 6, key=key, greedy=False, temperature=0.8
+        )
+        b, _ = engine.generate(
+            params, cfg, prompts, 6, key=key, greedy=False, temperature=0.8
+        )
+        assert a.shape == (prompts.shape[0], 6)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestCompileCache:
+    def test_single_trace_across_repeated_calls(self):
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        for i in range(3):
+            _, t = engine.generate(
+                params, cfg, prompts, 4, key=jax.random.PRNGKey(i)
+            )
+        assert engine.num_compiled == 1
+        assert engine.total_traces() == 1
+        assert t["traces"] == 1.0
+        assert t["compiled_this_call"] == 0.0
+
+    def test_distinct_signatures_compile_separately(self):
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        engine.generate(params, cfg, prompts, 4)
+        engine.generate(params, cfg, prompts, 5)                 # num_tokens
+        engine.generate(params, cfg, prompts[:, :4], 4)          # prompt_len
+        import dataclasses
+        cfg2 = cfg.with_updates(
+            link=dataclasses.replace(cfg.link, loss_rate=0.5)
+        )
+        engine.generate(params, cfg2, prompts, 4)                # link spec
+        assert engine.num_compiled == 4
+        assert engine.total_traces() == 4
+
+    def test_greedy_ignores_temperature_in_cache_key(self):
+        """Greedy decoding ignores temperature — identical programs must
+        hit the same cache entry, not compile twice."""
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        engine.generate(params, cfg, prompts, 3, greedy=True, temperature=1.0)
+        engine.generate(params, cfg, prompts, 3, greedy=True, temperature=0.7)
+        assert engine.num_compiled == 1
+        assert engine.total_traces() == 1
+
+    def test_first_call_timing_excludes_compile(self):
+        """The compiling call warms up internally: its generate_s is pure
+        execution, with the one-off cost reported as compile_s."""
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        _, t_first = engine.generate(params, cfg, prompts, 8)
+        _, t_second = engine.generate(params, cfg, prompts, 8)
+        assert t_first["compiled_this_call"] == 1.0
+        assert t_first["compile_s"] > t_first["generate_s"]
+        assert t_second["compiled_this_call"] == 0.0
+        assert t_second["compile_s"] == 0.0
+
+    def test_default_engine_is_shared(self):
+        assert default_engine() is default_engine()
+
+
+class TestComputeTiming:
+    def test_reference_timing_includes_injected_compute(self, monkeypatch):
+        """Sleep-injected serve step: per-token compute of ~delay seconds
+        must show up in decode_s_per_token (the seed timed async dispatch,
+        which returns before the step finishes)."""
+        delay = 0.02
+        num_tokens = 5
+        orig = serve_mod.make_serve_step
+
+        def _sleep_identity(x):
+            time.sleep(delay)
+            return x
+
+        def slow_make_serve_step(cfg, **kw):
+            real = orig(cfg, **kw)
+
+            def step(params, token, cache, index, key):
+                logits, new_cache = real(params, token, cache, index, key)
+                logits = jax.pure_callback(
+                    _sleep_identity,
+                    jax.ShapeDtypeStruct(logits.shape, logits.dtype),
+                    logits,
+                )
+                return logits, new_cache
+
+            return step
+
+        monkeypatch.setattr(serve_mod, "make_serve_step", slow_make_serve_step)
+        cfg, params, prompts = _setup()
+        _, t = generate_reference(
+            params, cfg, prompts, num_tokens, loss_rate=0.0,
+            key=jax.random.PRNGKey(0),
+        )
+        assert t["decode_s_per_token"] * num_tokens >= 0.8 * delay * num_tokens
+
+    def test_engine_timing_monotone_in_tokens(self):
+        """More decode rounds, more (blocked) time — trivially true for a
+        compute-accurate timer, false for a dispatch timer."""
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        # Warm both signatures so neither timing includes compile.
+        engine.generate(params, cfg, prompts, 2)
+        engine.generate(params, cfg, prompts, 32)
+        _, t_short = engine.generate(params, cfg, prompts, 2)
+        _, t_long = engine.generate(params, cfg, prompts, 32)
+        assert t_long["generate_s"] > t_short["generate_s"]
+
+
+class TestServeDriver:
+    def test_generate_timings_contract(self):
+        """launch.serve.generate keeps the link-accounting keys the examples
+        and system tests consume."""
+        cfg, params, prompts = _setup()
+        toks, t = generate(
+            params, cfg, prompts, 4, loss_rate=0.3, engine=DecodeEngine()
+        )
+        assert toks.shape == (2, 4)
+        assert t["link_latency_s_per_round"] > 0
+        assert t["message_kb_per_token"] > 0
+        assert t["tokens_per_s"] > 0
