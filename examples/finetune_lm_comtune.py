@@ -1,6 +1,9 @@
-"""COMtune for LMs: fine-tune the same reduced model twice — with and
-without the lossy-link emulation — then compare held-out perplexity when
-serving over a lossy channel.  The LM analog of the paper's Fig. 5.
+"""COMtune for LMs: fine-tune the same reduced model three ways — no link
+emulation (baseline), the paper's dropout emulation (Eq. 7), and this
+repo's channel-aware emulation (fine-tuning against the bursty deployment
+channel: Gilbert–Elliott, shuffle=False) — then compare held-out perplexity
+when serving over both an i.i.d. and a bursty lossy channel.  The LM analog
+of the paper's Fig. 5, generalized to bursty links.
 
     PYTHONPATH=src python examples/finetune_lm_comtune.py
 """
@@ -10,46 +13,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import comtune
 from repro.data import lm_batch_iterator, make_lm_dataset
 from repro.launch.train import train
 from repro.models import lm
 
 
-def eval_nll(params, cfg, tokens, loss_rate, key):
+def eval_nll(params, cfg, tokens, link_spec, key):
     """Held-out next-token NLL with the serve-path link (Eq. 12) active."""
     logits, _, aux = lm.forward(
         params, tokens, cfg,
-        link_key=key, link_mode="serve" if loss_rate > 0 else "clean",
-        loss_rate=loss_rate, mode="prefill",
+        link_key=key,
+        link_mode="serve" if link_spec is not None else "clean",
+        link_spec=link_spec, mode="prefill",
     )
     return float(lm.lm_loss(logits, tokens, aux, 0.0))
 
 
 def main():
     arch = "qwen1.5-0.5b"
-    print(f"== fine-tuning reduced {arch}: COMtune vs baseline ==")
-    params_ct, losses_ct, cfg = train(
-        arch, steps=200, batch=8, seq=64, lr=1e-3, link_mode="train",
-        log_every=100, seed=0,
-    )
-    params_bl, losses_bl, _ = train(
-        arch, steps=200, batch=8, seq=64, lr=1e-3, link_mode="off",
-        log_every=100, seed=0,
+    kw = dict(steps=200, batch=8, seq=64, lr=1e-3, log_every=100, seed=0)
+    print(f"== fine-tuning reduced {arch}: baseline vs COMtune variants ==")
+    params_bl, _, cfg = train(arch, link_mode="off", **kw)
+    params_dr, _, _ = train(arch, link_mode="train", **kw)
+    params_ch, _, _ = train(
+        arch, link_mode="train", train_link="channel", train_channel="ge",
+        shuffle=False, curriculum=(0.1, 0.5), **kw
     )
 
     toks = make_lm_dataset(cfg.vocab_size, 40_000, seed=9)
-    batch = next(lm_batch_iterator(toks, 16, 64, seed=9))
-    batch = jnp.asarray(batch)
+    batch = jnp.asarray(next(lm_batch_iterator(toks, 16, 64, seed=9)))
 
-    print(f"\n{'loss rate':>10s} {'baseline NLL':>13s} {'COMtune NLL':>12s}")
-    for p in [0.0, 0.2, 0.5, 0.7]:
-        nlls_bl, nlls_ct = [], []
-        for s in range(3):
-            k = jax.random.PRNGKey(100 + s)
-            nlls_bl.append(eval_nll(params_bl, cfg, batch, p, k))
-            nlls_ct.append(eval_nll(params_ct, cfg, batch, p, k))
-        marker = "  <-- COMtune wins" if np.mean(nlls_ct) < np.mean(nlls_bl) - 0.01 else ""
-        print(f"{p:10.1f} {np.mean(nlls_bl):13.3f} {np.mean(nlls_ct):12.3f}{marker}")
+    models = [("baseline", params_bl), ("dropout", params_dr), ("channel", params_ch)]
+    for ch_name, eval_channel in [("iid", "iid"), ("ge-burst", "ge")]:
+        print(f"\n-- serve channel: {ch_name} --")
+        print(f"{'loss rate':>10s} " + " ".join(f"{n:>10s}" for n, _ in models))
+        for p in [0.0, 0.2, 0.5, 0.7]:
+            spec = (
+                comtune.LinkSpec(
+                    loss_rate=p, channel=eval_channel, shuffle=False
+                ) if p > 0 else None
+            )
+            row = []
+            for _, params in models:
+                nlls = [
+                    eval_nll(params, cfg, batch, spec, jax.random.PRNGKey(100 + s))
+                    for s in range(3)
+                ]
+                row.append(np.mean(nlls))
+            best = int(np.argmin(row))
+            cells = " ".join(
+                f"{v:10.3f}" + ("*" if i == best and p > 0 else " ")
+                for i, v in enumerate(row)
+            )
+            print(f"{p:10.1f} {cells}")
+    print("\n(* = lowest NLL at that loss rate)")
 
 
 if __name__ == "__main__":

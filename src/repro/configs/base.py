@@ -33,9 +33,14 @@ class LinkConfig:
     split_after_units: int = 1
     dropout_rate: float = 0.2       # r used in fine-tuning
     loss_rate: float = 0.1          # p used in serving
+    # Fine-tuning channel emulation (core.comtune.emulate_link):
+    # "dropout" is the paper's Eq. 7; "channel" trains against the full
+    # serving channel below (stateful masks + FEC, straight-through grads).
+    train_link: str = "dropout"
     compression: str = "quant"      # identity | quant | pca
     quant_bits: int = 8
     pca_dim: int = 0                # 0 -> d_model // 4
+    shuffle: bool = True            # paper's anti-burst interleaving (Eq. 2)
 
     # Channel process at serve time (repro.net.channels registry):
     # iid | ge | gilbert_elliott | fading | trace.  channel_params is a

@@ -8,6 +8,7 @@ from repro.core.comtune import (  # noqa: F401
     di_latency_s,
     distributed_inference,
     dropout_link,
+    emulate_link,
     message_bytes,
 )
 from repro.core.compression import Compressor, PCASpec, QuantSpec  # noqa: F401

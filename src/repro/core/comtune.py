@@ -4,17 +4,27 @@ Two compositions over a split model ``f = f_out ∘ f_in``:
 
 * Fine-tuning graph (Eq. 8):
       f_trn = f_out ∘ f_dec ∘ f_d(r) ∘ f_cmp ∘ f_in
-  where ``f_d`` is inverted dropout with rate ``r`` (Eq. 7) emulating the
-  channel + receiver compensation.
+  where ``f_d`` emulates the channel + receiver compensation.  The paper
+  uses inverted dropout with rate ``r`` (Eq. 7); ``spec.train_link =
+  "channel"`` replaces it with the *deployment* channel — stateful burst
+  masks (Gilbert–Elliott / fading / trace), ``shuffle=False`` senders, and
+  differentiable FEC emulation — so fine-tuning targets the link the model
+  will actually serve on.
 
 * Distributed-inference graph (Eq. 12):
       y = f_out ∘ f_dec ∘ (1/(1-p) · f_c(p)) ∘ f_cmp ∘ f_in
   where ``f_c`` is the real (simulated) packet-loss channel (Eq. 1/10) and
   the receiver compensates by 1/(1-p) (Eq. 11).
 
-``LinkSpec`` carries everything about the emulated link: dropout rate for
-training, loss rate + granularity for serving, the compressor, and whether
-the fused Pallas egress kernel should be used on the serving path.
+Both graphs route through ONE entry point, :func:`emulate_link` — the
+single differentiable link path shared by training and serving, so any
+channel/FEC configuration the serving stack supports can also be trained
+against.
+
+``LinkSpec`` carries everything about the emulated link: the train-time
+emulation kind + dropout rate, loss rate + granularity for serving, the
+compressor, channel process, FEC code, and whether the fused Pallas egress
+kernel should be used on the serving path.
 
 These functions are architecture-agnostic: ``f_in``/``f_out`` are arbitrary
 callables (CNN halves in the paper reproduction, transformer layer-stacks in
@@ -30,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import link as link_lib
+from repro.core.link import MIN_KEEP_FRACTION
 from repro.core.compression import Compressor
 
 
@@ -39,6 +50,11 @@ class LinkSpec:
 
     dropout_rate: float = 0.0          # r used during COMtune fine-tuning
     loss_rate: float = 0.0             # p used during DI serving
+    # What emulates the channel in the fine-tuning graph (Eq. 8):
+    #   "dropout" — the paper's Eq. 7 inverted dropout at dropout_rate.
+    #   "channel" — the full serving channel (spec.channel/fec_*) at
+    #               loss_rate, with straight-through mask gradients.
+    train_link: str = "dropout"
     compressor: Compressor = dataclasses.field(default_factory=Compressor)
     granularity: str = "element"       # "element" (Eq. 1) or "packet" (Eq. 2-3)
     elements_per_packet: int = 25      # 100 B packets / 4 B floats
@@ -60,10 +76,32 @@ class LinkSpec:
     fec_kind: str = "rs"
 
     def with_loss_rate(self, p: float) -> "LinkSpec":
-        return dataclasses.replace(self, loss_rate=p)
+        return self.with_channel_loss_rate(p)
 
     def with_dropout_rate(self, r: float) -> "LinkSpec":
         return dataclasses.replace(self, dropout_rate=r)
+
+    def with_train_link(self, kind: str) -> "LinkSpec":
+        return dataclasses.replace(self, train_link=kind)
+
+    def with_channel_loss_rate(self, rate: float) -> "LinkSpec":
+        """Set ``loss_rate`` authoritatively: any ``("loss_rate", x)``
+        entry in channel_params is dropped, since it would shadow the new
+        rate in ``resolve_channel``/``channel_link`` and silently pin the
+        channel at the old value."""
+        params = tuple(
+            (k, v) for k, v in self.channel_params if k != "loss_rate"
+        )
+        return dataclasses.replace(self, loss_rate=rate, channel_params=params)
+
+    def with_train_rate(self, rate: float) -> "LinkSpec":
+        """Set the rate the *training* emulation draws losses at: the
+        dropout rate for ``train_link="dropout"``, the (authoritative)
+        channel loss rate for ``train_link="channel"`` (curriculum
+        schedules use this)."""
+        if self.train_link == "channel":
+            return self.with_channel_loss_rate(rate)
+        return dataclasses.replace(self, dropout_rate=rate)
 
     def with_channel(self, channel: str, **params) -> "LinkSpec":
         return dataclasses.replace(
@@ -151,8 +189,12 @@ def _stateful_channel_mask(key: jax.Array, x: jax.Array, spec: LinkSpec):
 
 
 def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
-    """Eq. (10)-(11): the serving-time channel + compensation, acting on the
-    *compressed* message representation.  ``spec.channel`` selects the
+    """Eq. (10)-(11): the channel + compensation, acting on the
+    *compressed* message representation (serve path), or on the STE
+    roundtrip activation when the train graph emulates the deployment
+    channel (``emulate_link`` with ``train_link="channel"``; masks and
+    compensation are stop-gradient, so grads are identity-on-mask).
+    ``spec.channel`` selects the
     channel process: "iid" keeps the paper's Eq. 1-3 path (with the
     channel_params loss_rate override honored in place); the stateful
     models (Gilbert–Elliott bursts, Markov fading, trace replay) and FEC
@@ -177,7 +219,8 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
                     spec.shuffle,
                 )
                 mask = flat.reshape(x.shape)
-            kept = jnp.maximum(mask.mean(), 1e-3)
+            mask = jax.lax.stop_gradient(mask)
+            kept = jnp.maximum(mask.mean(), MIN_KEEP_FRACTION)
             return x * mask.astype(x.dtype) / kept.astype(x.dtype)
         return link_lib.apply_channel(
             key,
@@ -189,11 +232,73 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
             compensate=True,
         )
     mask, p_eff = _stateful_channel_mask(key, x, spec)
+    mask = jax.lax.stop_gradient(mask)
     if spec.adaptive_compensation:
-        kept = jnp.maximum(mask.mean(), 1e-3)
+        kept = jnp.maximum(mask.mean(), MIN_KEEP_FRACTION)
         return x * mask.astype(x.dtype) / kept.astype(x.dtype)
-    keep = max(1.0 - p_eff, 1e-6)
+    keep = max(1.0 - p_eff, MIN_KEEP_FRACTION)
     return x * mask.astype(x.dtype) / jnp.asarray(keep, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# The one differentiable link path (train + serve)
+# ---------------------------------------------------------------------------
+
+def emulate_link(
+    key: Optional[jax.Array], x: jax.Array, spec: LinkSpec, mode: str
+) -> jax.Array:
+    """THE link-emulation entry point: one differentiable path through
+    compression + channel + compensation, shared by the fine-tuning graph
+    (Eq. 8) and the DI serving graph (Eq. 12).
+
+    mode:
+      "train" -> STE compression roundtrip, then the emulation selected by
+                 ``spec.train_link``:
+                   "dropout" — Eq. 7 inverted dropout at ``dropout_rate``
+                               (bit-compatible with the legacy path);
+                   "channel" — the full serving channel at ``loss_rate``
+                               (stateful burst masks, shuffle=False
+                               senders, trace replay, FEC residual-loss
+                               patterns) with straight-through
+                               identity-on-mask gradients, so fine-tuning
+                               can target the deployment link.
+      "serve" -> Eq. 12: compress -> channel(p) -> 1/(1-p) -> decompress,
+                 including the fused Pallas egress fast path.
+      "clean" -> compression roundtrip only (reliable-protocol reference).
+      "off"   -> identity.
+    """
+    if mode == "off":
+        return x
+    if mode == "clean":
+        return spec.compressor.decompress(spec.compressor.compress(x))
+    if mode == "train":
+        a = spec.compressor.roundtrip_train(x)
+        if spec.train_link == "dropout":
+            return dropout_link(key, a, spec.dropout_rate)
+        if spec.train_link == "channel":
+            # channel_link stop-gradients its masks and compensation, so
+            # grads flow identity-on-mask exactly as through Eq. 7 dropout.
+            return channel_link(key, a, spec)
+        raise ValueError(f"unknown train_link: {spec.train_link!r}")
+    if mode == "serve":
+        # The fused egress kernel implements the plain iid channel only;
+        # anything on the net path (bursty channels, FEC, loss-rate
+        # override) must route through channel_link (which has its own
+        # Pallas burst_mask path for GE).
+        if (
+            spec.use_kernel
+            and spec.compressor.kind == "quant"
+            and not spec.uses_net_path
+        ):
+            from repro.kernels.lossy_link import ops as ll_ops
+
+            return ll_ops.lossy_link_egress(
+                key, x, spec.compressor.quant, spec.loss_rate
+            )
+        msg = spec.compressor.compress(x)
+        msg = channel_link(key, msg, spec)
+        return spec.compressor.decompress(msg)
+    raise ValueError(f"unknown link mode: {mode!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -213,12 +318,11 @@ def comtune_forward(
     spec: LinkSpec,
     train: bool = True,
 ) -> jax.Array:
-    """Eq. (8): the fine-tuning graph.  Dropout emulates the channel; the
+    """Eq. (8): the fine-tuning graph.  ``spec.train_link`` selects the
+    channel emulation (Eq. 7 dropout or the full deployment channel); the
     compressor is applied as a differentiable roundtrip (STE for quant)."""
     a = f_in(params_in, x)
-    a = spec.compressor.roundtrip_train(a)
-    if train:
-        a = dropout_link(key, a, spec.dropout_rate)
+    a = emulate_link(key, a, spec, "train" if train else "clean")
     return f_out(params_out, a)
 
 
@@ -238,28 +342,7 @@ def distributed_inference(
     server side:  y  = f_out(f_dec(a' / (1-p)))
     """
     a_raw = f_in(params_in, x)
-    msg = spec.compressor.compress(a_raw)
-    # The fused egress kernel implements the plain iid channel only;
-    # anything on the net path (bursty channels, FEC, loss-rate override)
-    # must route through channel_link (which has its own Pallas burst_mask
-    # path for GE).
-    if (
-        spec.use_kernel
-        and spec.compressor.kind == "quant"
-        and not spec.uses_net_path
-    ):
-        from repro.kernels.lossy_link import ops as ll_ops
-
-        a_rec = ll_ops.lossy_link_egress(
-            key,
-            a_raw,
-            spec.compressor.quant,
-            spec.loss_rate,
-        )
-    else:
-        msg = channel_link(key, msg, spec)
-        a_rec = spec.compressor.decompress(msg)
-    return f_out(params_out, a_rec)
+    return f_out(params_out, emulate_link(key, a_raw, spec, "serve"))
 
 
 def message_bytes(spec: LinkSpec, feature_dim: int) -> float:
@@ -273,12 +356,43 @@ def di_latency_s(
     feature_dim: int,
     batch: int,
     channel: link_lib.ChannelConfig,
+    protocol=None,
 ) -> float:
-    """Communication latency of one DI round (unreliable protocol,
-    §III-B): n_t * l / b.  FEC expands n_t by (k+m)/k."""
+    """Expected communication latency of one DI round.
+
+    ``protocol`` selects the link-layer policy (``repro.net.protocol``):
+
+    * ``None`` / ``"unreliable"`` — the paper's §III-B one-shot protocol:
+      deterministic ``n_t * l / b``, with FEC expanding ``n_t`` by
+      ``(k+m)/k``.
+    * ``"arq"`` / ``"fec_arq"`` (or a policy instance) — the mean of the
+      policy's analytic latency PMF at ``channel.loss_rate``.  ``"arq"``
+      retransmits the (FEC-expanded, if any) packet stream; ``"fec_arq"``
+      codes blocks itself, so it is handed the *raw* data-packet count and
+      uses ``spec``'s FEC code (required for the string form — pass a
+      ``HybridFECARQProtocol`` instance to choose the code explicitly).
+    """
     total_bytes = message_bytes(spec, feature_dim) * batch
-    n_t = -(-int(total_bytes) // channel.packet_bytes)
+    n_data = -(-int(total_bytes) // channel.packet_bytes)
     fspec = spec.fec_spec
-    if fspec is not None:
-        n_t = fspec.transmitted_packets(n_t)
-    return n_t * channel.slot_time_s()
+    n_tx = fspec.transmitted_packets(n_data) if fspec is not None else n_data
+
+    if protocol is None or protocol == "unreliable":
+        return n_tx * channel.slot_time_s()
+
+    if isinstance(protocol, str):
+        from repro.net import protocol as protocol_lib
+
+        kwargs = {}
+        if protocol == "fec_arq":
+            if fspec is None:
+                raise ValueError(
+                    "protocol='fec_arq' needs the spec's FEC code (set "
+                    "fec_k/fec_m) or pass a HybridFECARQProtocol instance"
+                )
+            kwargs["fec"] = fspec
+        policy = protocol_lib.make_protocol(protocol, **kwargs)
+    else:
+        policy = protocol
+    n_t = n_data if getattr(policy, "name", "") == "fec_arq" else n_tx
+    return policy.expected_latency_s(n_t, channel)

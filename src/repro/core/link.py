@@ -29,6 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Floor for every kept-fraction denominator (1 - p, mask.mean(), 1 - p_eff)
+# so loss_rate -> 1.0 returns zeros (everything dropped) instead of
+# 0 * inf = NaN.  The single constant shared by apply_channel and all of
+# core.comtune's compensation paths.
+MIN_KEEP_FRACTION = 1e-6
+
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
@@ -128,9 +134,9 @@ def apply_channel(
         raise ValueError(f"unknown granularity: {granularity!r}")
     y = x * mask.astype(x.dtype)
     if compensate:
-        # Clamp so loss_rate -> 1.0 returns zeros (everything dropped)
-        # instead of 0 * inf = NaN.
-        keep = jnp.maximum(1.0 - jnp.asarray(loss_rate, jnp.float32), 1e-6)
+        keep = jnp.maximum(
+            1.0 - jnp.asarray(loss_rate, jnp.float32), MIN_KEEP_FRACTION
+        )
         y = y / keep.astype(x.dtype)
     return y
 

@@ -28,10 +28,13 @@ from repro.sharding import ctx as shard_ctx
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, adam_cfg: AdamConfig, link_mode: str = "train",
-                    mesh=None):
-    """COMtune fine-tuning step: LM loss with the dropout link layer active
-    at the split point (paper Eq. 8); link_mode='off' is the 'previous DI'
-    baseline (no channel emulation)."""
+                    link_spec=None, mesh=None):
+    """COMtune fine-tuning step: LM loss with the link-emulation layer
+    active at the split point (paper Eq. 8); link_mode='off' is the
+    'previous DI' baseline (no channel emulation).  ``link_spec`` (a full
+    ``core.comtune.LinkSpec``) selects the train-time emulation — Eq. 7
+    dropout or the deployment channel (bursts, shuffle=False, FEC) — and
+    carries the curriculum's current rate; None derives it from cfg.link."""
 
     def train_step(params, opt_state: AdamState, batch: Dict[str, Any], key):
       with shard_ctx.use_shard_map_mesh(mesh):
@@ -43,6 +46,7 @@ def make_train_step(cfg: ModelConfig, adam_cfg: AdamConfig, link_mode: str = "tr
                 frontend_embed=batch.get("frontend_embed"),
                 link_key=key,
                 link_mode=link_mode,
+                link_spec=link_spec,
                 mode="train",
             )
             loss = lm.lm_loss(logits, batch["tokens"], aux, cfg.router_aux_coef)
@@ -54,6 +58,51 @@ def make_train_step(cfg: ModelConfig, adam_cfg: AdamConfig, link_mode: str = "tr
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def make_train_epoch(
+    cfg: ModelConfig,
+    adam_cfg: AdamConfig,
+    link_mode: str = "train",
+    link_spec=None,
+    mesh=None,
+    jit: bool = True,
+):
+    """K train steps in ONE jitted ``lax.scan`` program (the PR-2 decode
+    treatment applied to the trainer): params/opt-state are donated scan
+    carries, and the per-step ``jax.random.split`` chain is identical to
+    the per-step Python loop — ``key, sub = split(key)`` inside the scan
+    body, exactly as ``launch/train.py`` did from Python — so loss
+    trajectories match the loop bit-for-bit under fixed keys.
+
+    Returns ``epoch_fn(params, opt_state, batches, key) ->
+    (params, opt_state, key, metrics)`` where ``batches`` is the usual
+    batch dict with a leading steps axis K (e.g. tokens (K, B, S)) and
+    ``metrics`` holds per-step ``loss``/``grad_norm`` arrays of shape (K,)
+    — the device-side loss buffer the driver syncs only at log points.
+    The returned ``key`` continues the chain, so consecutive epochs
+    compose to the same trajectory as one long loop.
+    """
+    step = make_train_step(
+        cfg, adam_cfg, link_mode=link_mode, link_spec=link_spec, mesh=mesh
+    )
+
+    def epoch_fn(params, opt_state, batches, key):
+        def body(carry, batch):
+            params, opt_state, key = carry
+            key, sub = jax.random.split(key)
+            params, opt_state, metrics = step(params, opt_state, batch, sub)
+            out = {"loss": metrics["loss"], "grad_norm": metrics["grad_norm"]}
+            return (params, opt_state, key), out
+
+        (params, opt_state, key), metrics = jax.lax.scan(
+            body, (params, opt_state, key), batches
+        )
+        return params, opt_state, key, metrics
+
+    if not jit:
+        return epoch_fn
+    return jax.jit(epoch_fn, donate_argnums=(0, 1))
 
 
 def make_prefill_step(cfg: ModelConfig, link_mode: str = "serve", mesh=None):
@@ -230,28 +279,42 @@ def _ns(mesh, tree):
     return rules.to_shardings(tree, mesh)
 
 
+def _train_shard_specs(cfg, shape_cfg, mesh, adam_cfg, fsdp):
+    """(abstract_args, p_spec, o_spec, batch_spec) for a train shape — the
+    single source both the per-step and the scan-epoch sharded builders
+    consume (the epoch builder prepends the K scan axis)."""
+    args, kind = input_specs(cfg, shape_cfg, adam_cfg)
+    assert kind == "train", f"expected a train shape, got {kind}"
+    p_spec = rules.param_pspecs(args[0], mesh, fsdp=fsdp)
+    o_spec = rules.opt_state_pspecs(args[1], p_spec, mesh)
+    bspec = rules.token_pspec(mesh, shape_cfg.global_batch)
+    batch_spec = {"tokens": bspec}
+    if "frontend_embed" in args[2]:
+        batch_spec["frontend_embed"] = P(bspec[0], None, None)
+    return args, p_spec, o_spec, batch_spec
+
+
 def build_sharded_step(
     cfg: ModelConfig,
     shape_cfg: ShapeConfig,
     mesh: Mesh,
     adam_cfg: Optional[AdamConfig] = None,
     link_mode: Optional[str] = None,
+    link_spec=None,
     fsdp="on",
     moe_shard_map: bool = False,
 ):
-    """Returns (jitted_fn, abstract_args) with full in/out shardings."""
+    """Returns (jitted_fn, abstract_args) with full in/out shardings.
+    ``link_spec`` (train kind only) overrides the cfg-derived LinkSpec."""
     adam_cfg = adam_cfg or AdamConfig(state_dtype="bfloat16")
-    args, kind = input_specs(cfg, shape_cfg, adam_cfg)
-    p_spec = rules.param_pspecs(args[0], mesh, fsdp=fsdp)
-    bspec = rules.token_pspec(mesh, shape_cfg.global_batch)
     rep = P()
 
-    if kind == "train":
-        o_spec = rules.opt_state_pspecs(args[1], p_spec, mesh)
-        batch_spec = {"tokens": bspec}
-        if "frontend_embed" in args[2]:
-            batch_spec["frontend_embed"] = P(bspec[0], None, None)
+    if shape_cfg.kind == "train":
+        args, p_spec, o_spec, batch_spec = _train_shard_specs(
+            cfg, shape_cfg, mesh, adam_cfg, fsdp
+        )
         fn = make_train_step(cfg, adam_cfg, link_mode=link_mode or "train",
+                             link_spec=link_spec,
                              mesh=mesh if moe_shard_map else None)
         jitted = jax.jit(
             fn,
@@ -267,6 +330,9 @@ def build_sharded_step(
         )
         return jitted, args
 
+    args, kind = input_specs(cfg, shape_cfg, adam_cfg)
+    p_spec = rules.param_pspecs(args[0], mesh, fsdp=fsdp)
+    bspec = rules.token_pspec(mesh, shape_cfg.global_batch)
     c_spec = rules.cache_pspecs(cfg, shape_cfg, mesh)
     logits_spec = P(bspec[0], "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None)
 
@@ -304,3 +370,54 @@ def build_sharded_step(
         donate_argnums=(2,),
     )
     return jitted, args
+
+
+def build_sharded_epoch(
+    cfg: ModelConfig,
+    shape_cfg: ShapeConfig,
+    mesh: Mesh,
+    steps_per_epoch: int,
+    adam_cfg: Optional[AdamConfig] = None,
+    link_mode: str = "train",
+    link_spec=None,
+    fsdp="on",
+    moe_shard_map: bool = False,
+):
+    """Data-parallel scan-compiled trainer: ``make_train_epoch`` jitted
+    with full in/out shardings over ``mesh`` (``launch.mesh.make_host_mesh``
+    for local runs).  Batches are batch-sharded over the 'data' axis with
+    the leading K (steps) scan axis replicated; params/opt-state follow the
+    FSDP rules and are donated, so one dispatch runs K sharded steps.
+
+    Returns (jitted_epoch_fn, abstract_args) where abstract_args mirror
+    ``epoch_fn(params, opt_state, batches, key)``.
+    """
+    adam_cfg = adam_cfg or AdamConfig(state_dtype="bfloat16")
+    args, p_spec, o_spec, step_batch_spec = _train_shard_specs(
+        cfg, shape_cfg, mesh, adam_cfg, fsdp
+    )
+    # Same sharding as the per-step path, with the K scan axis replicated.
+    batch_spec = {k: P(None, *v) for k, v in step_batch_spec.items()}
+    rep = P()
+    fn = make_train_epoch(
+        cfg, adam_cfg, link_mode=link_mode, link_spec=link_spec,
+        mesh=mesh if moe_shard_map else None, jit=False,
+    )
+    jitted = jax.jit(
+        fn,
+        in_shardings=(
+            _ns(mesh, p_spec), _ns(mesh, o_spec), _ns(mesh, batch_spec),
+            NamedSharding(mesh, rep),
+        ),
+        out_shardings=(
+            _ns(mesh, p_spec), _ns(mesh, o_spec), NamedSharding(mesh, rep),
+            _ns(mesh, {"loss": rep, "grad_norm": rep}),
+        ),
+        donate_argnums=(0, 1),
+    )
+    k = steps_per_epoch
+    ep_batches = {
+        name: jax.ShapeDtypeStruct((k,) + tuple(s.shape), s.dtype)
+        for name, s in args[2].items()
+    }
+    return jitted, (args[0], args[1], ep_batches, args[3])

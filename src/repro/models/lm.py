@@ -9,6 +9,7 @@ lowered multi-pod program.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -87,59 +88,67 @@ def _compressor_from_params(cfg: ModelConfig, link_params: Params) -> Compressor
     return Compressor(kind="identity")
 
 
+def link_spec_from_config(
+    cfg: ModelConfig,
+    loss_rate: Optional[float] = None,
+    **overrides,
+) -> comtune.LinkSpec:
+    """The ``LinkSpec`` a model config implies (compressor left at its
+    default — the calibrated one lives in the param pytree and is grafted
+    on inside :func:`make_link_fn`)."""
+    link = cfg.link
+    spec_kwargs = dict(
+        dropout_rate=link.dropout_rate,
+        loss_rate=link.loss_rate if loss_rate is None else loss_rate,
+        train_link=link.train_link,
+        channel=link.channel,
+        channel_params=tuple(link.channel_params),
+        shuffle=link.shuffle,
+        fec_k=link.fec_k,
+        fec_m=link.fec_m,
+        fec_kind=link.fec_kind,
+    )
+    spec_kwargs.update(overrides)
+    return comtune.LinkSpec(**spec_kwargs)
+
+
 def make_link_fn(
     cfg: ModelConfig,
     link_params: Params,
     key: Optional[jax.Array],
     mode: str,
     loss_rate: Optional[float] = None,
-    spec_overrides: Optional[dict] = None,
+    link_spec: Optional[comtune.LinkSpec] = None,
 ):
-    """Build the function applied at the split point.
+    """Build the function applied at the split point — a closure over
+    ``comtune.emulate_link``, the one differentiable link path shared by
+    training and serving.
 
     mode:
-      "train"   -> Eq. 8:  STE-compressed roundtrip + dropout(r)
+      "train"   -> Eq. 8:  STE-compressed roundtrip + the emulation picked
+                   by ``spec.train_link`` (Eq. 7 dropout / full channel)
       "serve"   -> Eq. 12: compress -> channel(p) -> 1/(1-p) -> decompress
       "clean"   -> compression only, no loss (reliable-protocol reference)
       "off"     -> None (link disabled; plain model)
+
+    ``link_spec`` (a full ``LinkSpec``, e.g. from the trainer's curriculum)
+    takes precedence over the cfg-derived spec; its compressor field is
+    replaced by the calibrated one carried in ``link_params`` either way.
     """
     if mode == "off":
         return None
     compressor = _compressor_from_params(cfg, link_params)
-    link = cfg.link
-    spec_kwargs = dict(
-        dropout_rate=link.dropout_rate,
-        loss_rate=link.loss_rate if loss_rate is None else loss_rate,
-        compressor=compressor,
-        channel=link.channel,
-        channel_params=tuple(link.channel_params),
-        fec_k=link.fec_k,
-        fec_m=link.fec_m,
-        fec_kind=link.fec_kind,
-    )
-    spec_kwargs.update(spec_overrides or {})
-    spec = comtune.LinkSpec(**spec_kwargs)
+    if link_spec is None:
+        link_spec = link_spec_from_config(cfg, loss_rate=loss_rate)
+    elif loss_rate is not None:
+        # Authoritative: also strips a channel_params ("loss_rate", x)
+        # entry that would otherwise shadow the caller's rate.
+        link_spec = link_spec.with_channel_loss_rate(loss_rate)
+    spec = dataclasses.replace(link_spec, compressor=compressor)
 
-    if mode == "train":
+    def fn(x):
+        return comtune.emulate_link(key, x, spec, mode)
 
-        def fn(x):
-            a = compressor.roundtrip_train(x)
-            return comtune.dropout_link(key, a, spec.dropout_rate)
-
-    elif mode == "serve":
-
-        def fn(x):
-            msg = compressor.compress(x)
-            msg = comtune.channel_link(key, msg, spec)
-            return compressor.decompress(msg)
-
-    elif mode == "clean":
-
-        def fn(x):
-            return compressor.decompress(compressor.compress(x))
-
-    else:
-        raise ValueError(mode)
     return fn
 
 
@@ -159,9 +168,14 @@ def forward(
     link_key: Optional[jax.Array] = None,
     link_mode: str = "off",
     loss_rate: Optional[float] = None,
+    link_spec: Optional[comtune.LinkSpec] = None,
     mode: str = "train",
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
-    """Returns (logits (B, S, V) float32, new_cache, moe_aux)."""
+    """Returns (logits (B, S, V) float32, new_cache, moe_aux).
+
+    ``link_spec`` carries the full emulated-link configuration (channel
+    process, FEC, train-time emulation kind, curriculum rate); when omitted
+    it is derived from ``cfg.link``."""
     b, s = tokens.shape
     x = params["embed"][tokens]
     if cfg.embed_scale:
@@ -176,7 +190,8 @@ def forward(
         )
 
     link_fn = make_link_fn(
-        cfg, params["link"], link_key, link_mode, loss_rate=loss_rate
+        cfg, params["link"], link_key, link_mode, loss_rate=loss_rate,
+        link_spec=link_spec,
     )
     x, new_cache, aux = transformer.run_stack(
         params["stack"],

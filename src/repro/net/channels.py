@@ -404,6 +404,21 @@ CHANNELS = {
 }
 
 
+def supports_target_rate(name: str, params=()) -> bool:
+    """True when ``make_channel(name, loss_rate=p, **params)`` actually
+    hits the target stationary rate ``p`` — i.e. a loss-rate curriculum
+    over this channel is meaningful.  ``fading``/``trace`` derive their
+    loss from their own physics/recording, and a GE channel given explicit
+    ``p_gb``/``p_bg`` transition probabilities is fully pinned by them —
+    all of these ignore ``loss_rate``, so the trainer warns rather than
+    silently ramping a no-op knob."""
+    key = name.lower()
+    if key in ("ge", "gilbert_elliott"):
+        pd = dict(params)
+        return "p_gb" not in pd and "p_bg" not in pd
+    return key == "iid"
+
+
 def make_channel(name: str, loss_rate: float = 0.1, **params) -> Channel:
     """Build a channel by registry name.
 

@@ -258,7 +258,10 @@ def fec_element_keep_jnp(
     over the *expanded* (data+parity) packet stream, decode per block, and
     expand surviving data packets to elements.  Differentiable in the sense
     required by COMtune: it is a constant 0/1 mask applied multiplicatively
-    to the activation."""
+    to the activation, so the train graph (``core.comtune.emulate_link``
+    with ``train_link="channel"``) gets straight-through identity-on-mask
+    gradients — guaranteed here by the explicit stop_gradient, whatever
+    channel produced the packet draw."""
     from repro.net.channels import element_mask_from_packets
 
     kperm, kmask = jax.random.split(key)
@@ -266,9 +269,9 @@ def fec_element_keep_jnp(
     n_tx = spec.transmitted_packets(n_data)
     raw = channel.packet_keep_jnp(kmask, n_tx)
     data_keep = block_recovery_mask(raw, spec)[:n_data]
-    return element_mask_from_packets(
+    return jax.lax.stop_gradient(element_mask_from_packets(
         data_keep, num_elements, elements_per_packet, kperm, shuffle
-    )
+    ))
 
 
 def residual_loss_rate(spec: FECSpec, channel) -> float:

@@ -1,0 +1,386 @@
+"""Channel-aware COMtune training (this PR's tentpole): the unified
+``emulate_link`` path, gradients through the channel-emulation train graph,
+the scan-compiled train epoch, the kept-fraction clamp, protocol-aware
+latency, and checkpoint/resume."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comtune, link
+from repro.launch.steps import (
+    build_sharded_epoch,
+    make_train_epoch,
+    make_train_step,
+)
+from repro.models import lm
+from repro.optim import AdamConfig, init_adam
+
+TINY = dict(
+    d_model=32, num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+    vocab_size=64,
+)
+
+
+def tiny_cfg():
+    from repro.configs import get_config
+
+    return get_config("qwen1.5-0.5b").reduced(**TINY)
+
+
+CHANNEL_SPEC = comtune.LinkSpec(
+    train_link="channel", channel="ge", shuffle=False, loss_rate=0.4,
+    fec_k=10, fec_m=2,
+)
+
+
+class TestEmulateLink:
+    def test_train_dropout_bit_identical_to_legacy(self):
+        """The ``link="dropout"`` train path must be bit-compatible with the
+        seed's dropout_link under fixed keys (identity compressor)."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+        key = jax.random.PRNGKey(3)
+        spec = comtune.LinkSpec(dropout_rate=0.3)
+        got = comtune.emulate_link(key, x, spec, "train")
+        want = comtune.dropout_link(key, x, 0.3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_serve_matches_channel_link(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+        key = jax.random.PRNGKey(5)
+        spec = comtune.LinkSpec(loss_rate=0.4, channel="ge", shuffle=False)
+        got = comtune.emulate_link(key, x, spec, "serve")
+        want = comtune.channel_link(key, x, spec)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_train_channel_emulates_bursts_and_compensates(self):
+        """shuffle=False GE emulation drops whole packets (bursts) and
+        compensates by 1/(1-p_eff)."""
+        x = jnp.ones((4000,))
+        spec = comtune.LinkSpec(
+            train_link="channel", channel="ge", shuffle=False, loss_rate=0.5,
+        )
+        y = np.asarray(comtune.emulate_link(jax.random.PRNGKey(0), x, spec, "train"))
+        blocks = y[: (y.size // 25) * 25].reshape(-1, 25)
+        nz = (blocks != 0).sum(axis=1)
+        assert np.all((nz == 0) | (nz == 25))       # whole-packet erasures
+        assert abs(np.asarray(y)[y != 0][0] - 2.0) < 0.2   # ~1/(1-0.5)
+
+    def test_off_and_clean_modes(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+        spec = comtune.LinkSpec(loss_rate=0.9)
+        assert comtune.emulate_link(None, x, spec, "off") is x
+        np.testing.assert_array_equal(
+            np.asarray(comtune.emulate_link(None, x, spec, "clean")),
+            np.asarray(x),
+        )
+
+    def test_with_train_rate_overrides_channel_params(self):
+        """A curriculum rate must actually reach the channel even when the
+        spec carried a channel_params loss_rate override (which would
+        otherwise shadow spec.loss_rate in resolve_channel)."""
+        spec = comtune.LinkSpec(
+            train_link="channel", channel="ge",
+            channel_params=(("loss_rate", 0.3),),
+        )
+        ramped = spec.with_train_rate(0.6)
+        assert ramped.loss_rate == 0.6
+        assert "loss_rate" not in dict(ramped.channel_params)
+        assert abs(ramped.resolve_channel().stationary_loss_rate - 0.6) < 1e-9
+        # dropout specs ramp the dropout rate and keep channel_params
+        drop = comtune.LinkSpec(dropout_rate=0.2).with_train_rate(0.5)
+        assert drop.dropout_rate == 0.5
+
+    def test_rate_overrides_and_noop_detection(self):
+        """--train-loss-rate must strip a shadowing channel_params entry
+        (like with_train_rate does), and supports_target_rate must flag
+        channels whose loss rate is pinned by their own params."""
+        from repro.configs import get_config
+        from repro.launch.train import build_train_link_spec
+        from repro.net.channels import supports_target_rate
+
+        cfg = get_config("qwen1.5-0.5b").reduced()
+        cfg = cfg.with_updates(link=dataclasses.replace(
+            cfg.link, channel="ge", channel_params=(("loss_rate", 0.1),),
+        ))
+        spec = build_train_link_spec(cfg, train_link="channel", loss_rate=0.5)
+        assert abs(spec.resolve_channel().stationary_loss_rate - 0.5) < 1e-9
+        assert supports_target_rate("ge")
+        assert not supports_target_rate("ge", (("p_gb", 0.05), ("p_bg", 0.4)))
+        assert not supports_target_rate("fading")
+        # asking for a train channel / FEC implies the channel emulation
+        assert build_train_link_spec(cfg, train_channel="ge").train_link == "channel"
+        assert build_train_link_spec(cfg, train_fec=(10, 2)).train_link == "channel"
+
+    def test_curriculum_schedule_ramps(self):
+        from repro.launch.train import curriculum_schedule
+
+        chunks = curriculum_schedule(50, 10, (0.1, 0.5))
+        assert [s for s, _, _ in chunks] == [0, 10, 20, 30, 40]
+        np.testing.assert_allclose(
+            [r for _, _, r in chunks], [0.1, 0.2, 0.3, 0.4, 0.5]
+        )
+        assert curriculum_schedule(50, 10, None) == [
+            (s, 10, None) for s in range(0, 50, 10)
+        ]
+
+    def test_unknown_modes_raise(self):
+        x = jnp.ones((4,))
+        with pytest.raises(ValueError):
+            comtune.emulate_link(jax.random.PRNGKey(0), x, comtune.LinkSpec(), "bogus")
+        bad = comtune.LinkSpec(train_link="bogus")
+        with pytest.raises(ValueError):
+            comtune.emulate_link(jax.random.PRNGKey(0), x, bad, "train")
+
+
+class TestChannelTrainGradients:
+    def test_grads_flow_through_ge_fec_emulation(self):
+        """The whole point of the tentpole: fine-tuning against the bursty
+        FEC-protected channel must produce real gradients on BOTH sides of
+        the split (device-side embed and server-side head included)."""
+        cfg = tiny_cfg()
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size, jnp.int32
+        )
+
+        def loss_fn(p):
+            logits, _, aux = lm.forward(
+                p, tokens, cfg, link_key=jax.random.PRNGKey(2),
+                link_mode="train", link_spec=CHANNEL_SPEC, mode="train",
+            )
+            return lm.lm_loss(logits, tokens, aux, cfg.router_aux_coef)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert np.isfinite(float(loss))
+        g_embed = float(jnp.abs(grads["embed"]).sum())        # device side
+        g_norm = float(jnp.abs(grads["final_norm"]["scale"]).sum())  # server
+        assert g_embed > 0.0 and np.isfinite(g_embed)
+        assert g_norm > 0.0 and np.isfinite(g_norm)
+
+    def test_train_step_accepts_link_spec(self):
+        cfg = tiny_cfg()
+        adam_cfg = AdamConfig(lr=1e-3)
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        opt = init_adam(params, adam_cfg)
+        step = jax.jit(make_train_step(cfg, adam_cfg, link_spec=CHANNEL_SPEC))
+        b = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size, jnp.int32
+        )}
+        _, _, metrics = step(params, opt, b, jax.random.PRNGKey(3))
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["grad_norm"]) > 0.0
+
+
+class TestScanEpoch:
+    K, B, S = 6, 2, 16
+
+    def _batches(self, cfg):
+        return jax.random.randint(
+            jax.random.PRNGKey(7), (self.K, self.B, self.S), 0,
+            cfg.vocab_size, jnp.int32,
+        )
+
+    def _loop(self, cfg, adam_cfg, toks, link_spec=None):
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        opt = init_adam(params, adam_cfg)
+        step = jax.jit(make_train_step(cfg, adam_cfg, link_spec=link_spec))
+        key = jax.random.PRNGKey(42)
+        losses = []
+        for i in range(self.K):
+            key, sub = jax.random.split(key)
+            params, opt, m = step(params, opt, {"tokens": toks[i]}, sub)
+            losses.append(np.asarray(m["loss"]))
+        return params, np.asarray(losses), key
+
+    def test_bit_identical_to_per_step_loop(self):
+        """Acceptance: the scan epoch reproduces the per-step loop's loss
+        trajectory bit-for-bit (same greedy key chain) for link=dropout,
+        and returns the continued key."""
+        cfg = tiny_cfg()
+        adam_cfg = AdamConfig(lr=3e-4, grad_clip_norm=1.0)
+        toks = self._batches(cfg)
+        p1, losses_loop, key_loop = self._loop(cfg, adam_cfg, toks)
+
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        opt = init_adam(params, adam_cfg)
+        epoch = make_train_epoch(cfg, adam_cfg)
+        p2, _, key_scan, metrics = epoch(
+            params, opt, {"tokens": toks}, jax.random.PRNGKey(42)
+        )
+        np.testing.assert_array_equal(np.asarray(metrics["loss"]), losses_loop)
+        np.testing.assert_array_equal(np.asarray(key_scan), np.asarray(key_loop))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_channel_link_epoch_finite(self):
+        cfg = tiny_cfg()
+        adam_cfg = AdamConfig(lr=3e-4)
+        toks = self._batches(cfg)
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        opt = init_adam(params, adam_cfg)
+        epoch = make_train_epoch(cfg, adam_cfg, link_spec=CHANNEL_SPEC)
+        _, _, _, metrics = epoch(
+            params, opt, {"tokens": toks}, jax.random.PRNGKey(42)
+        )
+        assert np.all(np.isfinite(np.asarray(metrics["loss"])))
+
+    def test_sharded_epoch_matches_unsharded(self):
+        from repro.configs.base import ShapeConfig
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = tiny_cfg()
+        adam_cfg = AdamConfig(lr=3e-4, grad_clip_norm=1.0)
+        toks = self._batches(cfg)
+        _, losses_loop, _ = self._loop(cfg, adam_cfg, toks)
+        mesh = make_host_mesh()
+        shape_cfg = ShapeConfig("train_tiny", self.S, self.B, "train")
+        epoch, _ = build_sharded_epoch(
+            cfg, shape_cfg, mesh, self.K, adam_cfg=adam_cfg, fsdp="off"
+        )
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        opt = init_adam(params, adam_cfg)
+        _, _, _, metrics = epoch(
+            params, opt, {"tokens": toks}, jax.random.PRNGKey(42)
+        )
+        np.testing.assert_allclose(
+            np.asarray(metrics["loss"]), losses_loop, rtol=1e-6
+        )
+
+
+class TestKeptFractionClamp:
+    """Satellite: ONE clamp constant (link.MIN_KEEP_FRACTION) everywhere —
+    total loss must yield zeros, never NaN, on every compensation path."""
+
+    def test_adaptive_compensation_total_loss(self):
+        x = jnp.ones((64,))
+        for gran in ("element", "packet"):
+            spec = comtune.LinkSpec(
+                loss_rate=1.0, adaptive_compensation=True, granularity=gran
+            )
+            y = np.asarray(comtune.channel_link(jax.random.PRNGKey(0), x, spec))
+            assert np.all(np.isfinite(y)) and np.all(y == 0.0), gran
+
+    def test_stateful_adaptive_total_loss(self):
+        x = jnp.ones((64,))
+        spec = comtune.LinkSpec(
+            channel="ge", adaptive_compensation=True,
+            channel_params=(
+                ("p_gb", 1.0), ("p_bg", 0.0),
+                ("loss_good", 1.0), ("loss_bad", 1.0),
+            ),
+        )
+        y = np.asarray(comtune.channel_link(jax.random.PRNGKey(0), x, spec))
+        assert np.all(np.isfinite(y)) and np.all(y == 0.0)
+
+    def test_train_channel_total_loss(self):
+        x = jnp.ones((64,))
+        spec = comtune.LinkSpec(train_link="channel", loss_rate=1.0)
+        y = np.asarray(comtune.emulate_link(jax.random.PRNGKey(0), x, spec, "train"))
+        assert np.all(np.isfinite(y)) and np.all(y == 0.0)
+
+    def test_single_constant(self):
+        assert link.MIN_KEEP_FRACTION == comtune.MIN_KEEP_FRACTION
+
+
+class TestProtocolLatency:
+    FEAT, BATCH = 4096, 1
+
+    def test_unreliable_default_unchanged(self):
+        cfg = link.ChannelConfig(loss_rate=0.3)
+        spec = comtune.LinkSpec()
+        base = comtune.di_latency_s(spec, self.FEAT, self.BATCH, cfg)
+        assert base == comtune.di_latency_s(
+            spec, self.FEAT, self.BATCH, cfg, protocol="unreliable"
+        )
+
+    def test_arq_matches_pmf_mean(self):
+        from repro.net import protocol as protocol_lib
+
+        cfg = link.ChannelConfig(loss_rate=0.3)
+        spec = comtune.LinkSpec()
+        got = comtune.di_latency_s(
+            spec, self.FEAT, self.BATCH, cfg, protocol="arq"
+        )
+        n_t = -(-int(comtune.message_bytes(spec, self.FEAT) * self.BATCH)
+                // cfg.packet_bytes)
+        lat, pmf = protocol_lib.ARQProtocol().latency_pmf(n_t, cfg)
+        assert abs(got - float(np.dot(lat, pmf))) < 1e-12
+        # retransmissions make ARQ slower than one-shot on a lossy link
+        assert got > comtune.di_latency_s(spec, self.FEAT, self.BATCH, cfg)
+
+    def test_hybrid_uses_spec_fec(self):
+        from repro.net import protocol as protocol_lib
+        from repro.net.fec import FECSpec
+
+        cfg = link.ChannelConfig(loss_rate=0.3)
+        spec = comtune.LinkSpec(fec_k=8, fec_m=2)
+        got = comtune.di_latency_s(
+            spec, self.FEAT, self.BATCH, cfg, protocol="fec_arq"
+        )
+        n_data = -(-int(comtune.message_bytes(spec, self.FEAT) * self.BATCH)
+                   // cfg.packet_bytes)
+        policy = protocol_lib.HybridFECARQProtocol(fec=FECSpec(k=8, m=2))
+        lat, pmf = policy.latency_pmf(n_data, cfg)
+        assert abs(got - float(np.dot(lat, pmf))) < 1e-12
+
+    def test_fec_arq_without_spec_fec_rejected(self):
+        cfg = link.ChannelConfig(loss_rate=0.3)
+        with pytest.raises(ValueError, match="fec_arq"):
+            comtune.di_latency_s(
+                comtune.LinkSpec(), self.FEAT, self.BATCH, cfg,
+                protocol="fec_arq",
+            )
+
+    def test_policy_instance_accepted(self):
+        from repro.net import protocol as protocol_lib
+
+        cfg = link.ChannelConfig(loss_rate=0.2)
+        spec = comtune.LinkSpec()
+        policy = protocol_lib.ARQProtocol(max_rounds=2)
+        got = comtune.di_latency_s(
+            spec, self.FEAT, self.BATCH, cfg, protocol=policy
+        )
+        assert got == policy.expected_latency_s(
+            -(-int(comtune.message_bytes(spec, self.FEAT)) // cfg.packet_bytes),
+            cfg,
+        )
+
+
+class TestCheckpointResume:
+    def test_scan_epoch_saves_on_offgrid_ckpt_every(self, tmp_path):
+        """Periodic saves must fire even when ckpt_every doesn't divide the
+        chunk grid (a ckpt point inside a chunk saves at its boundary)."""
+        from repro.launch.train import train
+
+        d = str(tmp_path)
+        train(
+            "qwen1.5-0.5b", steps=9, batch=2, seq=16, log_every=1000,
+            steps_per_epoch=4, ckpt_dir=d, ckpt_every=3,
+        )
+        # chunks end at 4, 8, 9; ckpt points 3, 6, 9 land inside them
+        assert sorted(os.listdir(d)) == [
+            "train_00000004.npz", "train_00000008.npz", "train_00000009.npz"
+        ]
+
+    def test_resume_reproduces_loss_curve(self, tmp_path):
+        """Satellite: a run interrupted at step 4 and resumed must emit the
+        same losses as the uninterrupted run (params/opt/key restored, data
+        stream replayed)."""
+        from repro.launch.train import train
+
+        d = str(tmp_path)
+        kw = dict(
+            steps=8, batch=2, seq=16, log_every=1000, steps_per_epoch=4,
+            ckpt_dir=d, ckpt_every=4,
+        )
+        _, full, _ = train("qwen1.5-0.5b", **kw)
+        os.remove(os.path.join(d, "train_00000008.npz"))
+        _, tail, _ = train("qwen1.5-0.5b", resume=True, **kw)
+        np.testing.assert_array_equal(np.asarray(full[4:]), np.asarray(tail))
