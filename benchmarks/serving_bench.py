@@ -1,0 +1,274 @@
+"""Serving benchmark: continuous-batching slot pool vs whole-generation engine.
+
+Builds a mixed-length Poisson workload (``--clients`` Poisson processes,
+prompt lengths spread over >= 3 power-of-two buckets), replays it in
+arrival order through
+
+* the **continuous engine** (``repro.serve.continuous``): slot-pooled,
+  bucketed prefill, one fused decode step — after the per-bucket warm-up
+  the whole run executes with ZERO new XLA builds (AOT ``Compiled``
+  programs cannot retrace; ``engine.compiles`` proves it), and
+* the **whole-generation engine** (``repro.serve.DecodeEngine``) serving
+  each request at its exact (prompt_len, num_tokens) signature, batch 1 —
+  the recompile-storm baseline: one AOT build per distinct signature,
+  then sequential per-request execution.
+
+Emits ``BENCH_serving.json`` with sustained tokens/s, request completion
+p50/p99 under saturated replay, total/steady-state compile counts, slot
+occupancy, and the old-engine baseline (warm and cold).
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] \
+        [--out BENCH_serving.json] [--assert-max-compiles N] \
+        [--assert-zero-steady-compiles] [--assert-min-rps 1.0] \
+        [--assert-min-speedup 2.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.models import lm
+from repro.serve import ContinuousEngine, DecodeEngine, PoolConfig
+
+
+def _percentiles(xs):
+    arr = np.asarray(xs, dtype=np.float64)
+    return {
+        "p50_s": float(np.percentile(arr, 50)),
+        "p99_s": float(np.percentile(arr, 99)),
+        "mean_s": float(arr.mean()),
+    }
+
+
+def build_workload(
+    n_clients: int,
+    rate_hz: float,
+    duration_s: float,
+    lengths,
+    vocab: int,
+    seed: int = 0,
+    min_requests: int = 8,
+):
+    """Poisson arrivals per client, merged and sorted; each request gets a
+    prompt whose length cycles through ``lengths`` (>= 3 buckets)."""
+    rng = np.random.RandomState(seed)
+    arrivals = []
+    for c in range(n_clients):
+        t = rng.exponential(1.0 / rate_hz)
+        while t < duration_s:
+            arrivals.append((t, c))
+            t += rng.exponential(1.0 / rate_hz)
+    arrivals.sort()
+    while len(arrivals) < min_requests:          # tiny-duration safety net
+        arrivals.append((duration_s, len(arrivals) % n_clients))
+    prompts = []
+    for i, (t, c) in enumerate(arrivals):
+        L = int(lengths[i % len(lengths)])
+        prompts.append(rng.randint(0, vocab, size=(L,)).astype(np.int32))
+    return arrivals, prompts
+
+
+def run_bench(
+    arch: str = "qwen1.5-0.5b",
+    n_clients: int = 24,
+    rate_hz: float = 1.0,
+    duration_s: float = 1.0,
+    lengths=(5, 7, 11, 14, 22, 28),
+    tokens: int = 16,
+    max_slots: int = 8,
+    loss_rate: float = 0.1,
+    channel: str = "iid",
+    seed: int = 0,
+    full_size: bool = False,
+) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if not full_size:
+        cfg = cfg.reduced()
+    cfg = cfg.with_updates(
+        link=dataclasses.replace(cfg.link, loss_rate=loss_rate, channel=channel)
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    arrivals, prompts = build_workload(
+        n_clients, rate_hz, duration_s, lengths, cfg.vocab_size, seed=seed
+    )
+    n_req = len(prompts)
+    base_key = jax.random.PRNGKey(seed)
+
+    # ---- continuous engine -------------------------------------------------
+    pool = PoolConfig(
+        max_slots=max_slots,
+        max_new=max(16, tokens),
+        max_prompt=max(int(max(lengths)), 8),
+    )
+    eng = ContinuousEngine(cfg, pool)
+    buckets = sorted({eng.bucket_for(len(p)) for p in prompts})
+
+    # Warm-up: one throwaway request per bucket compiles every program the
+    # workload can touch (num_buckets prefills + 1 decode step).
+    for i, b in enumerate(buckets):
+        p = next(p for p in prompts if eng.bucket_for(len(p)) == b)
+        eng.submit(p, 1, key=jax.random.fold_in(base_key, 10_000 + i))
+    eng.run(params)
+    warm_compiles = eng.compiles
+    warm_compile_s = eng.compile_s
+
+    t0 = time.perf_counter()
+    reqs = [
+        eng.submit(p, tokens, key=jax.random.fold_in(base_key, i))
+        for i, p in enumerate(prompts)
+    ]
+    eng.run(params)
+    t_eng = time.perf_counter() - t0
+    completion = [r.t_done - t0 for r in reqs]
+    eng_stats = {
+        "tokens_per_s": n_req * tokens / t_eng,
+        "requests_per_s": n_req / t_eng,
+        "wall_s": t_eng,
+        "compiles_total": eng.compiles,
+        "compiles_warmup": warm_compiles,
+        "compiles_steady": eng.compiles - warm_compiles,
+        "compile_s": eng.compile_s,
+        "num_buckets": eng.num_buckets,
+        "traces": eng.traces,
+        "slot_occupancy": eng.stats()["slot_occupancy"],
+        "max_slots": max_slots,
+        **_percentiles(completion),
+    }
+
+    # ---- whole-generation baseline ----------------------------------------
+    # Each request served at its exact signature, batch 1 — under the mixed
+    # workload that is one AOT build per distinct (prompt_len, tokens).
+    old = DecodeEngine()
+    t0 = time.perf_counter()
+    for i, p in enumerate(prompts):          # cold pass: the recompile storm
+        old.generate(params, cfg, jnp.asarray(p)[None], tokens,
+                     key=jax.random.fold_in(base_key, i))
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    done_at = []
+    for i, p in enumerate(prompts):          # warm pass: steady-state
+        old.generate(params, cfg, jnp.asarray(p)[None], tokens,
+                     key=jax.random.fold_in(base_key, i))
+        done_at.append(time.perf_counter() - t0)
+    t_warm = time.perf_counter() - t0
+    ref_stats = {
+        "tokens_per_s": n_req * tokens / t_warm,
+        "tokens_per_s_cold": n_req * tokens / t_cold,
+        "wall_s": t_warm,
+        "wall_s_cold": t_cold,
+        "signatures_compiled": old.num_compiled,
+        "compile_s": sum(e.compile_s for e in old._compiled.values()),
+        **_percentiles(done_at),
+    }
+
+    return {
+        "bench": "serving",
+        "arch": arch,
+        "n_clients": n_clients,
+        "rate_hz": rate_hz,
+        "n_requests": n_req,
+        "tokens": tokens,
+        "prompt_lengths": sorted(set(int(len(p)) for p in prompts)),
+        "buckets": [int(b) for b in buckets],
+        "loss_rate": loss_rate,
+        "channel": channel,
+        "backend": jax.default_backend(),
+        "engine": eng_stats,
+        "whole_generation": ref_stats,
+        "speedup": eng_stats["tokens_per_s"] / max(ref_stats["tokens_per_s"], 1e-9),
+        "speedup_vs_cold": eng_stats["tokens_per_s"]
+        / max(ref_stats["tokens_per_s_cold"], 1e-9),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=sorted(ARCHITECTURES))
+    ap.add_argument("--clients", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=1.0)
+    ap.add_argument("--duration", type=float, default=1.0)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--loss-rate", type=float, default=0.1)
+    ap.add_argument("--channel", default="iid",
+                    choices=["iid", "ge", "gilbert_elliott", "fading"])
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="reduced CPU preset: 3 prompt lengths (3 buckets), 8 tokens",
+    )
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--assert-max-compiles", type=int, default=None,
+                    help="fail if the engine built more XLA programs than this")
+    ap.add_argument("--assert-zero-steady-compiles", action="store_true")
+    ap.add_argument("--assert-min-rps", type=float, default=None)
+    ap.add_argument("--assert-min-speedup", type=float, default=None)
+    args = ap.parse_args()
+
+    kw = {}
+    if args.smoke:
+        kw = dict(lengths=(6, 12, 24), tokens=8, duration_s=0.5)
+    result = run_bench(
+        arch=args.arch,
+        n_clients=args.clients,
+        rate_hz=args.rate,
+        duration_s=kw.pop("duration_s", args.duration),
+        tokens=kw.pop("tokens", args.tokens),
+        max_slots=args.max_slots,
+        loss_rate=args.loss_rate,
+        channel=args.channel,
+        full_size=args.full_size,
+        **kw,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    eng, ref = result["engine"], result["whole_generation"]
+    print(
+        f"serving_bench[{result['arch']} reqs={result['n_requests']} "
+        f"buckets={result['buckets']}]: engine {eng['tokens_per_s']:.1f} tok/s "
+        f"({eng['requests_per_s']:.1f} req/s, occ {eng['slot_occupancy']:.2f}, "
+        f"compiles {eng['compiles_total']} = {eng['compiles_warmup']} warm-up "
+        f"+ {eng['compiles_steady']} steady) | whole-gen "
+        f"{ref['tokens_per_s']:.1f} tok/s warm / {ref['tokens_per_s_cold']:.1f} "
+        f"cold ({ref['signatures_compiled']} signatures) | speedup "
+        f"{result['speedup']:.1f}x warm, {result['speedup_vs_cold']:.1f}x cold "
+        f"-> {args.out}"
+    )
+
+    ok = True
+    if args.assert_max_compiles is not None and \
+            eng["compiles_total"] > args.assert_max_compiles:
+        print(f"ASSERT FAILED: {eng['compiles_total']} compiles > "
+              f"{args.assert_max_compiles}")
+        ok = False
+    if args.assert_zero_steady_compiles and eng["compiles_steady"] != 0:
+        print(f"ASSERT FAILED: {eng['compiles_steady']} steady-state compiles")
+        ok = False
+    if args.assert_min_rps is not None and \
+            eng["requests_per_s"] < args.assert_min_rps:
+        print(f"ASSERT FAILED: {eng['requests_per_s']:.2f} req/s < "
+              f"{args.assert_min_rps}")
+        ok = False
+    if args.assert_min_speedup is not None and \
+            result["speedup"] < args.assert_min_speedup:
+        print(f"ASSERT FAILED: speedup {result['speedup']:.2f}x < "
+              f"{args.assert_min_speedup}")
+        ok = False
+    raise SystemExit(0 if ok else 1)
+
+
+def run_bench_entry():  # console-script style alias
+    main()
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,21 @@ the server half of the model (repro.net.evalhook) instead of the offline
 interpolation curve — burst patterns and partial FEC recovery show up
 directly in the number.
 
+With ``--ckpt-dir DIR`` (implies model-in-the-loop) the model under load
+is a *channel-tuned LM checkpoint* from ``launch/train.py --ckpt-dir``:
+each request's realized packet mask is forced at the LM's split point and
+correctness is next-token prediction (repro.net.evalhook
+``make_lm_request_eval_fn``), so COMtune'd checkpoints are scored under
+the simulator's actual burst patterns.
+
+With ``--live-engine`` the server's batch compute time is no longer the
+analytic model: every served batch runs through the live continuous-
+batching engine (``repro.serve.continuous``), so the reported p50/p99
+include real compute and real (first-bucket-only) compile behavior.
+
     PYTHONPATH=src python examples/multiclient_serve.py [--clients 24] \
-        [--model-in-the-loop]
+        [--model-in-the-loop] [--ckpt-dir runs/ge --ckpt-arch qwen1.5-0.5b] \
+        [--live-engine]
 """
 
 from __future__ import annotations
@@ -60,6 +73,20 @@ def main():
         help="accuracy from realized per-request packet masks through the "
              "real model (instead of the interpolation curve)",
     )
+    ap.add_argument(
+        "--ckpt-dir", default=None,
+        help="evaluate a channel-tuned LM checkpoint from launch/train.py "
+             "in model-in-the-loop mode (next-token correctness under the "
+             "realized masks); implies --model-in-the-loop",
+    )
+    ap.add_argument("--ckpt-arch", default="qwen1.5-0.5b")
+    ap.add_argument("--ckpt-full-size", action="store_true")
+    ap.add_argument("--ckpt-seq-len", type=int, default=16)
+    ap.add_argument(
+        "--live-engine", action="store_true",
+        help="server batch compute time measured on the live continuous-"
+             "batching serve engine instead of the analytic model",
+    )
     args = ap.parse_args()
     assert args.clients >= 16, "demo is about many concurrent clients"
 
@@ -72,11 +99,63 @@ def main():
     print("  delivered-fraction -> accuracy: "
           + ", ".join(f"{f:.2f}:{a:.3f}" for f, a in zip(fracs, accs)))
 
-    n_packets = -(-model.split_dim // 25)   # 100 B packets / 4 B floats
+    request_eval_fn = None
+    lm_params = lm_cfg = None
+    if args.ckpt_dir:
+        import jax
+        from repro.checkpoint import restore_checkpoint
+        from repro.configs import get_config
+        from repro.models import lm as lm_lib
+        from repro.net.evalhook import make_lm_request_eval_fn
+        from repro.optim import AdamConfig, init_adam
+
+        args.model_in_the_loop = True
+        lm_cfg = get_config(args.ckpt_arch)
+        if not args.ckpt_full_size:
+            lm_cfg = lm_cfg.reduced()
+        lm_params = lm_lib.init_lm(jax.random.PRNGKey(0), lm_cfg)
+        template = {
+            "params": lm_params,
+            "opt_state": init_adam(lm_params, AdamConfig()),
+            "key": jax.random.PRNGKey(0),
+        }
+        restored, at_step = restore_checkpoint(
+            args.ckpt_dir, template, name="train"
+        )
+        lm_params = restored["params"]
+        print(f"  restored {args.ckpt_arch} checkpoint @ step {at_step} "
+              f"from {args.ckpt_dir}")
+        # The LM request message is the whole prompt activation.
+        n_packets = -(-(args.ckpt_seq_len * lm_cfg.d_model) // 25)
+        request_eval_fn = make_lm_request_eval_fn(
+            lm_params, lm_cfg, n_packets, seq_len=args.ckpt_seq_len
+        )
+    else:
+        n_packets = -(-model.split_dim // 25)   # 100 B packets / 4 B floats
     channel_cfg = ChannelConfig(loss_rate=args.loss_rate)
     protocol = ARQProtocol(max_rounds=3)
     print(f"  uplink: {n_packets} packets/request, "
           f"slot={channel_cfg.slot_time_s()*1e6:.0f}us, protocol=arq(3)")
+
+    sim_engine = None
+    if args.live_engine:
+        import jax
+        from repro.configs import get_config
+        from repro.models import lm as lm_lib
+        from repro.serve import ContinuousEngine, PoolConfig, make_sim_server
+
+        eng_cfg = lm_cfg or get_config(args.ckpt_arch).reduced()
+        eng_params = lm_params
+        if eng_params is None:
+            eng_params = lm_lib.init_lm(jax.random.PRNGKey(0), eng_cfg)
+        eng = ContinuousEngine(
+            eng_cfg, PoolConfig(max_slots=8, max_new=16, max_prompt=32)
+        )
+        sim_engine = make_sim_server(
+            eng, eng_params, prompt_lens=(8, 16, 32), num_tokens=8
+        )
+        print("  server compute: LIVE continuous-batching engine "
+              f"({eng_cfg.name}, 8 slots)")
 
     header = (f"{'load rps/client':>16s} {'arrived':>8s} {'served':>7s} "
               f"{'dropped':>8s} {'rps':>7s} {'p50 ms':>8s} {'p99 ms':>8s} "
@@ -99,6 +178,8 @@ def main():
             accuracy_fn=acc_fn,
             model_in_the_loop=args.model_in_the_loop,
             model=model,
+            request_eval_fn=request_eval_fn,
+            engine=sim_engine,
         )
         assert rep.arrived == rep.served + rep.dropped
         print(f"{rate:16.1f} {rep.arrived:8d} {rep.served:7d} "

@@ -143,9 +143,15 @@ class LinkSpec:
 # Link layers
 # ---------------------------------------------------------------------------
 
-def dropout_link(key: jax.Array, x: jax.Array, rate: float) -> jax.Array:
-    """Eq. (7): inverted dropout — the paper's channel emulation layer."""
-    if rate <= 0.0:
+def dropout_link(key: jax.Array, x: jax.Array, rate) -> jax.Array:
+    """Eq. (7): inverted dropout — the paper's channel emulation layer.
+
+    ``rate`` may be a traced scalar (the per-step curriculum passes the
+    ramped rate as scan data); the zero-rate shortcut only applies to
+    static Python rates, and a traced rate draws the same bernoulli bits
+    as the equal static rate (uniform < p), so constant traced schedules
+    stay bit-identical to the static path."""
+    if isinstance(rate, (int, float)) and rate <= 0.0:
         return x
     keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
     return jnp.where(keep, x / jnp.asarray(1.0 - rate, x.dtype), 0.0)
@@ -203,9 +209,11 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
     if spec.channel in ("", "iid") and spec.fec_m <= 0:
         # Paper path (Eq. 1-3), honoring spec.granularity.  A channel_params
         # loss_rate override just replaces the rate here, preserving the
-        # element/packet statistics the caller configured.
+        # element/packet statistics the caller configured.  The rate may be
+        # a traced scalar (per-step curriculum); only a static zero takes
+        # the shortcut.
         loss_rate = dict(spec.channel_params).get("loss_rate", spec.loss_rate)
-        if loss_rate <= 0.0:
+        if isinstance(loss_rate, (int, float)) and loss_rate <= 0.0:
             return x
         if spec.adaptive_compensation:
             # Beyond-paper: compensate by the realized keep fraction p̂
@@ -238,6 +246,39 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
         return x * mask.astype(x.dtype) / kept.astype(x.dtype)
     keep = max(1.0 - p_eff, MIN_KEEP_FRACTION)
     return x * mask.astype(x.dtype) / jnp.asarray(keep, x.dtype)
+
+
+def streamed_channel_link(key: jax.Array, msg: jax.Array, spec: LinkSpec) -> jax.Array:
+    """Per-position transmission of a (B, S, F) message: position ``i`` is
+    its own DI link round drawn with ``fold_in(key, i)`` — exactly the
+    per-round channel a decode step sees for its (B, 1, F) message.
+
+    This is the serving prefill's channel model: the prompt activation is
+    uploaded as ``S`` per-token rounds rather than one giant message.  Two
+    properties the continuous-batching engine relies on:
+
+    * **padding invariance** — position ``i``'s draw depends only on
+      ``(key, i, msg[:, i])``, so right-padding a prompt to a bucket length
+      leaves the masks on the real positions bit-identical to the unpadded
+      draw (the whole-message draw has no such prefix property: threefry
+      bits depend on the total element count);
+    * **decode-round consistency** — each round uses the same
+      ``channel_link`` the per-token decode path uses, with a fresh
+      stationary channel-state draw per round, so burst statistics match
+      the decode rounds instead of one long intra-message burst.  Position
+      0 uses the RAW key (later positions fold in their index), so a
+      streamed single-position message is bit-identical to the
+      non-streamed (B, 1, F) decode-round draw — a length-1 prompt padded
+      into a bucket matches its unpadded reference exactly.
+    """
+    idx = jnp.arange(msg.shape[1], dtype=jnp.int32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+    keys = keys.at[0].set(key)
+
+    def one(k, m):  # m: (B, F) — one position's message
+        return channel_link(k, m[:, None, :], spec)[:, 0]
+
+    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(keys, msg)
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +322,13 @@ def emulate_link(
             return channel_link(key, a, spec)
         raise ValueError(f"unknown train_link: {spec.train_link!r}")
     if mode == "serve":
+        if x.ndim == 3 and x.shape[1] > 1:
+            # Prefill-shaped (B, S, F) message: stream it as S per-token
+            # rounds (see streamed_channel_link) — padding-invariant and
+            # consistent with the per-round decode path.
+            msg = spec.compressor.compress(x)
+            msg = streamed_channel_link(key, msg, spec)
+            return spec.compressor.decompress(msg)
         # The fused egress kernel implements the plain iid channel only;
         # anything on the net path (bursty channels, FEC, loss-rate
         # override) must route through channel_link (which has its own

@@ -137,7 +137,11 @@ def apply_channel(
         keep = jnp.maximum(
             1.0 - jnp.asarray(loss_rate, jnp.float32), MIN_KEEP_FRACTION
         )
-        y = y / keep.astype(x.dtype)
+        # Explicit reciprocal-multiply (not y / keep): with a STATIC rate
+        # XLA folds the divide into this exact form anyway, so writing it
+        # out keeps a TRACED rate (per-step curriculum) bit-identical to
+        # the static-rate program instead of one ulp off.
+        y = y * (1.0 / keep).astype(x.dtype)
     return y
 
 

@@ -2,15 +2,21 @@
 emulated lossy IoT link — the paper's DI round (Eq. 12) generalized to
 autoregressive decoding.
 
-``generate()`` routes through the scan-compiled ``repro.serve`` engine:
-the whole generation (prefill + every per-token DI round) is one jitted
-``lax.scan`` program, compile-cached per (arch, batch, prompt_len,
-num_tokens, link-spec) so repeated calls never re-trace.
+``generate()`` rides the continuous-batching slot-pool engine
+(``repro.serve.continuous``) by default: the batch is served as B
+independent requests (per-request RNG chains ``fold_in(key, i)``, bucketed
+prefill, one fused decode step over the slot pool), so each request's
+greedy output is token-identical to ``generate_reference(prompts[i:i+1],
+key=fold_in(key, i))`` and repeated calls with nearby signatures reuse one
+pool with zero steady-state recompiles.  Passing ``engine=DecodeEngine()``
+(or ``greedy=False``) selects the whole-generation scan engine — one AOT
+program per exact signature, which draws ONE joint link mask across the
+batch (the legacy batch semantics its equivalence tests pin down).
 ``generate_reference()`` keeps the seed per-token Python loop (one jit
-dispatch per token) as the equivalence oracle and benchmark baseline; both
-report per-round message sizes and the analytic communication latency of
-the unreliable protocol (paper §III-B), and both time *compute* — the
-timed regions end in ``jax.block_until_ready``, not async dispatch.
+dispatch per token) as the equivalence oracle and benchmark baseline; all
+paths report per-round message sizes and the analytic communication
+latency of the unreliable protocol (paper §III-B), and time *compute* —
+the timed regions end in ``jax.block_until_ready``, not async dispatch.
 """
 
 from __future__ import annotations
@@ -78,16 +84,33 @@ def generate(
 ):
     """Returns (generated (B, num_tokens), timings dict).
 
-    Greedy output is token-for-token identical to ``generate_reference``
-    under the same key; the engine's compile cache makes repeated calls
-    with the same signature trace exactly once (``timings['traces']``).
+    Default (``engine=None``, greedy): the continuous-batching slot-pool
+    engine — per request ``i``, greedy output is token-for-token identical
+    to ``generate_reference(prompts[i:i+1], key=fold_in(key, i))``, and
+    the pool's AOT programs make repeated calls compile nothing new
+    (``timings['compiles']``/``timings['traces']``).  With an explicit
+    ``DecodeEngine`` (or sampling), the whole-generation scan engine
+    serves the batch under its legacy joint-mask semantics, token-exact
+    against ``generate_reference`` at the same batch under the same key.
     """
     cfg = _override_link(cfg, loss_rate=loss_rate, channel=channel)
-    engine = engine or default_engine()
-    tokens, timings = engine.generate(
-        params, cfg, prompts, num_tokens,
-        key=key, greedy=greedy, temperature=temperature,
-    )
+    from repro.serve import ContinuousEngine, continuous
+
+    if engine is None and greedy and not cfg.frontend:
+        # Frontend (VLM/audio) configs need an extra embed input the slot
+        # pool doesn't carry yet — they stay on the whole-generation engine.
+        engine = continuous.engine_for(cfg, prompts.shape[1], num_tokens)
+    if isinstance(engine, ContinuousEngine):
+        tokens, timings = engine.generate_batch(
+            params, prompts, num_tokens,
+            key=key if key is not None else jax.random.PRNGKey(0),
+        )
+    else:
+        engine = engine or default_engine()
+        tokens, timings = engine.generate(
+            params, cfg, prompts, num_tokens,
+            key=key, greedy=greedy, temperature=temperature,
+        )
     timings.update(_link_accounting(cfg, prompts.shape[0]))
     return tokens, timings
 

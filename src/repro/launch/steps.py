@@ -34,7 +34,13 @@ def make_train_step(cfg: ModelConfig, adam_cfg: AdamConfig, link_mode: str = "tr
     'previous DI' baseline (no channel emulation).  ``link_spec`` (a full
     ``core.comtune.LinkSpec``) selects the train-time emulation — Eq. 7
     dropout or the deployment channel (bursts, shuffle=False, FEC) — and
-    carries the curriculum's current rate; None derives it from cfg.link."""
+    carries the curriculum's current rate; None derives it from cfg.link.
+
+    A ``batch["link_rate"]`` scalar, when present, overrides the emulation
+    rate *as data* — inside a scanned epoch it is one element of a (K,)
+    schedule, so a loss-rate curriculum ramps per step without one compile
+    per rate (dropout / plain-iid train paths only; at a constant rate the
+    drawn masks are bit-identical to the static-rate program)."""
 
     def train_step(params, opt_state: AdamState, batch: Dict[str, Any], key):
       with shard_ctx.use_shard_map_mesh(mesh):
@@ -47,6 +53,7 @@ def make_train_step(cfg: ModelConfig, adam_cfg: AdamConfig, link_mode: str = "tr
                 link_key=key,
                 link_mode=link_mode,
                 link_spec=link_spec,
+                link_rate=batch.get("link_rate"),
                 mode="train",
             )
             loss = lm.lm_loss(logits, batch["tokens"], aux, cfg.router_aux_coef)
@@ -77,7 +84,9 @@ def make_train_epoch(
 
     Returns ``epoch_fn(params, opt_state, batches, key) ->
     (params, opt_state, key, metrics)`` where ``batches`` is the usual
-    batch dict with a leading steps axis K (e.g. tokens (K, B, S)) and
+    batch dict with a leading steps axis K (e.g. tokens (K, B, S),
+    optionally a ``link_rate`` (K,) per-step curriculum schedule — traced
+    data, so every rate runs in the SAME compiled epoch program) and
     ``metrics`` holds per-step ``loss``/``grad_norm`` arrays of shape (K,)
     — the device-side loss buffer the driver syncs only at log points.
     The returned ``key`` continues the chain, so consecutive epochs

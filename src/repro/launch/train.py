@@ -13,8 +13,10 @@ The emulated link at the split point is a full ``core.comtune.LinkSpec``:
 ``--train-link channel`` fine-tunes against the *deployment* channel
 (``--train-channel ge`` bursts, ``--no-shuffle`` senders, ``--train-fec
 10,2`` residual-loss patterns) instead of the paper's i.i.d. dropout, and
-``--curriculum p0:p1`` ramps the emulation rate across the run (applied at
-scan-epoch granularity — each chunk compiles with its static rate).
+``--curriculum p0:p1`` ramps the emulation rate across the run.  For the
+dropout / plain-iid emulations the ramp is applied PER STEP as traced scan
+data (one compiled epoch program per epoch shape); the stateful channels
+fall back to scan-epoch granularity, each chunk compiling its static rate.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
@@ -82,6 +84,25 @@ def build_train_link_spec(
     return spec
 
 
+def per_step_curriculum_ok(spec) -> bool:
+    """True when the ramped rate can be fed as TRACED per-step scan data
+    (one compiled epoch program for the whole ramp): the dropout emulation
+    and the plain-iid channel draw their masks directly from the rate.
+    The stateful channels (GE/fading/trace) and FEC bake the rate into
+    static tables, so they keep the chunked epoch-static ramp."""
+    if spec.train_link == "dropout":
+        return True
+    return spec.channel in ("", "iid") and spec.fec_m <= 0
+
+
+def curriculum_rates(steps: int, curriculum: Tuple[float, float]) -> np.ndarray:
+    """The per-step linear ramp p0 -> p1 over the whole run (float32)."""
+    p0, p1 = curriculum
+    if steps <= 1:
+        return np.full((max(steps, 1),), p0, np.float32)
+    return np.linspace(p0, p1, steps, dtype=np.float32)
+
+
 def curriculum_schedule(
     steps: int, steps_per_epoch: int, curriculum: Optional[Tuple[float, float]]
 ):
@@ -90,7 +111,11 @@ def curriculum_schedule(
     ``rate`` is None without a curriculum (the spec's own rate applies);
     with ``curriculum=(p0, p1)`` it ramps linearly over the chunks.  The
     rate is static per chunk — each distinct rate compiles its own epoch
-    program (compile-cached, so revisited rates never re-trace).
+    program (compile-cached, so revisited rates never re-trace).  The
+    iid/dropout train paths instead ramp per STEP with traced rates
+    (``per_step_curriculum_ok``): the chunk rate is ignored and a
+    ``link_rate`` slice of :func:`curriculum_rates` rides the batch dict,
+    keeping the compile count at 1 per epoch shape.
     """
     chunks = []
     start = 0
@@ -148,13 +173,24 @@ def train(
         cfg, train_link=train_link, train_channel=train_channel,
         train_fec=train_fec, shuffle=shuffle, loss_rate=train_loss_rate,
     )
+    # Per-step traced curriculum: the iid/dropout emulations take the
+    # ramped rate as scan DATA (batches["link_rate"]), so the whole ramp
+    # runs in one compiled epoch program per epoch shape.  The stateful
+    # channels keep the chunked epoch-static ramp (their rates are baked
+    # into static transition tables at trace time).
+    per_step = (
+        curriculum is not None
+        and epoch_scan
+        and not sharded
+        and per_step_curriculum_ok(link_spec)
+    )
     if steps_per_epoch <= 0:
         steps_per_epoch = min(steps, 50)
-        if curriculum is not None:
-            # A ramp needs multiple chunks (each chunk's rate is static);
-            # default to ~5 across the run rather than pinning at p0.
+        if curriculum is not None and not per_step:
+            # An epoch-static ramp needs multiple chunks (each chunk's rate
+            # is static); default to ~5 rather than pinning at p0.
             steps_per_epoch = min(steps_per_epoch, max(1, -(-steps // 5)))
-    elif curriculum is not None and steps_per_epoch >= steps > 1:
+    elif curriculum is not None and not per_step and steps_per_epoch >= steps > 1:
         print(
             "warning: --curriculum with a single epoch chunk "
             f"(--steps-per-epoch {steps_per_epoch} >= --steps {steps}) "
@@ -272,6 +308,9 @@ def train(
                 name="train",
             )
 
+    rates_global = (
+        curriculum_rates(steps, curriculum) if per_step else None
+    )
     chunks = curriculum_schedule(steps, steps_per_epoch, curriculum)
     for chunk_start, n_steps, rate in chunks:
         if chunk_start + n_steps <= start_step:
@@ -283,6 +322,13 @@ def train(
                 batches["frontend_embed"] = jnp.broadcast_to(
                     fe, (n_steps,) + fe.shape
                 )
+            if per_step:
+                # Traced per-step ramp: the rate is scan data, the epoch
+                # program is shared across every chunk of this shape.
+                batches["link_rate"] = jnp.asarray(
+                    rates_global[chunk_start : chunk_start + n_steps]
+                )
+                rate = None
             epoch_fn = get_epoch_fn(rate, n_steps)
             params, opt_state, key, metrics = epoch_fn(
                 params, opt_state, batches, key
@@ -296,7 +342,7 @@ def train(
         else:
             # Per-step path: the scan oracle/baseline, and how a resume
             # that lands mid-chunk re-aligns to the chunk grid.
-            step_fn = get_step_fn(rate)
+            step_fn = get_step_fn(None if per_step else rate)
             for i in range(n_steps):
                 step_global = chunk_start + i + 1
                 if step_global <= start_step:
@@ -304,6 +350,8 @@ def train(
                 b = {"tokens": jnp.asarray(next(it))}
                 if fe is not None:
                     b["frontend_embed"] = fe
+                if per_step:
+                    b["link_rate"] = jnp.asarray(rates_global[step_global - 1])
                 key, sub = jax.random.split(key)
                 params, opt_state, metrics = step_fn(params, opt_state, b, sub)
                 losses.append(metrics["loss"])

@@ -58,6 +58,53 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
 
 
+# ---------------------------------------------------------------------------
+# Slot pools (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+#
+# A slot pool is ``n_slots`` independent batch-1 decode states stacked on a
+# new leading slot axis: leaf shapes are ``(n_slots,) + leaf(batch=1)``.
+# The engine's fused decode step vmaps the per-token serve step over that
+# axis (per-slot cache index / RNG key / link round), and admission writes
+# a freshly prefilled batch-1 cache into one slot with
+# ``jax.lax.dynamic_update_slice`` — both are fixed-shape programs, so
+# requests join and retire without retracing.
+
+
+def init_slot_pool(cfg: ModelConfig, n_slots: int, max_seq: int) -> Dict[str, Any]:
+    """Zeros-initialized pool of ``n_slots`` batch-1 decode states."""
+    one = cache_spec(cfg, 1, max_seq)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros((n_slots,) + tuple(s.shape), s.dtype), one
+    )
+
+
+def write_slot(pool: Dict[str, Any], slot_cache: Dict[str, Any], slot) -> Dict[str, Any]:
+    """Overwrite slot ``slot`` (a traced int32 scalar is fine) of the pool
+    with a batch-1 cache of the same ``max_seq`` — the full-slot reset the
+    bucketed prefill performs at admission.  Every leaf of the slot's old
+    state is replaced, which is what makes the decode step's dirty writes
+    by retired slots harmless."""
+
+    def upd(p, c):
+        return jax.lax.dynamic_update_slice(
+            p, c[None].astype(p.dtype), (slot,) + (0,) * c.ndim
+        )
+
+    return jax.tree_util.tree_map(upd, pool, slot_cache)
+
+
+def read_slot(pool: Dict[str, Any], slot) -> Dict[str, Any]:
+    """One slot's batch-1 cache (dynamic_slice; ``slot`` may be traced)."""
+
+    def rd(p):
+        sizes = (1,) + tuple(p.shape[1:])
+        out = jax.lax.dynamic_slice(p, (slot,) + (0,) * (p.ndim - 1), sizes)
+        return out[0]
+
+    return jax.tree_util.tree_map(rd, pool)
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
     """Total decode-state footprint in bytes (no allocation) — what the
     serve engine's donated-cache scan carries, reported by decode_bench."""

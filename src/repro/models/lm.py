@@ -119,6 +119,7 @@ def make_link_fn(
     mode: str,
     loss_rate: Optional[float] = None,
     link_spec: Optional[comtune.LinkSpec] = None,
+    link_rate=None,
 ):
     """Build the function applied at the split point — a closure over
     ``comtune.emulate_link``, the one differentiable link path shared by
@@ -134,6 +135,14 @@ def make_link_fn(
     ``link_spec`` (a full ``LinkSpec``, e.g. from the trainer's curriculum)
     takes precedence over the cfg-derived spec; its compressor field is
     replaced by the calibrated one carried in ``link_params`` either way.
+
+    ``link_rate`` overrides the *emulation rate of the current mode* and
+    may be a TRACED scalar — this is how the per-step curriculum feeds the
+    ramped rate as scan data instead of a compile-time constant.  In train
+    mode it sets whatever ``spec.train_link`` draws at (dropout rate or
+    channel loss rate); in serve mode it sets the channel loss rate.
+    Traced rates are only supported on the dropout / plain-iid paths (the
+    stateful channels bake their rate into static transition tables).
     """
     if mode == "off":
         return None
@@ -144,6 +153,11 @@ def make_link_fn(
         # Authoritative: also strips a channel_params ("loss_rate", x)
         # entry that would otherwise shadow the caller's rate.
         link_spec = link_spec.with_channel_loss_rate(loss_rate)
+    if link_rate is not None:
+        if mode == "train":
+            link_spec = link_spec.with_train_rate(link_rate)
+        else:
+            link_spec = link_spec.with_channel_loss_rate(link_rate)
     spec = dataclasses.replace(link_spec, compressor=compressor)
 
     def fn(x):
@@ -169,13 +183,18 @@ def forward(
     link_mode: str = "off",
     loss_rate: Optional[float] = None,
     link_spec: Optional[comtune.LinkSpec] = None,
+    link_rate=None,
+    link_fn=None,
     mode: str = "train",
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
     """Returns (logits (B, S, V) float32, new_cache, moe_aux).
 
     ``link_spec`` carries the full emulated-link configuration (channel
     process, FEC, train-time emulation kind, curriculum rate); when omitted
-    it is derived from ``cfg.link``."""
+    it is derived from ``cfg.link``.  ``link_rate`` (possibly traced)
+    overrides the emulation rate — see :func:`make_link_fn`.  ``link_fn``
+    replaces the link layer entirely with a caller-supplied callable
+    (e.g. the eval hook forcing a *realized* delivery mask at the split)."""
     b, s = tokens.shape
     x = params["embed"][tokens]
     if cfg.embed_scale:
@@ -189,10 +208,11 @@ def forward(
             b, s, offset=offset, mrope=bool(cfg.mrope_sections)
         )
 
-    link_fn = make_link_fn(
-        cfg, params["link"], link_key, link_mode, loss_rate=loss_rate,
-        link_spec=link_spec,
-    )
+    if link_fn is None:
+        link_fn = make_link_fn(
+            cfg, params["link"], link_key, link_mode, loss_rate=loss_rate,
+            link_spec=link_spec, link_rate=link_rate,
+        )
     x, new_cache, aux = transformer.run_stack(
         params["stack"],
         x,

@@ -233,6 +233,71 @@ def make_request_eval_fn(
     return fn
 
 
+def make_lm_request_eval_fn(
+    params,
+    cfg,
+    n_packets: int,
+    seq_len: int = 16,
+    n_test: int = 256,
+    seed: int = 0,
+):
+    """Model-in-the-loop eval for an *LM* checkpoint (e.g. one produced by
+    ``launch/train.py --ckpt-dir``): request ``rid`` carries one held-out
+    synthetic sequence (sample ``rid % n_test``); its realized per-packet
+    uplink delivery mask is expanded to an element mask over the split
+    activation (seq_len x d_model elements, per-rid interleaving) and
+    forced at the split with realized-fraction compensation via the
+    ``lm.forward(link_fn=...)`` override; correctness is last-position
+    next-token prediction.  Returns ``(pkt_masks (R, n_packets) bool,
+    rids (R,)) -> correct (R,) bool`` for ``run_sim``'s
+    ``request_eval_fn`` — so channel-tuned checkpoints are scored under
+    the simulator's *actual* burst patterns, not an interpolation curve.
+    """
+    import repro.data as data
+    from repro.models import lm
+
+    # Checkpoint-restored pytrees are numpy; the jitted forward indexes the
+    # embedding with a tracer, which numpy arrays reject.
+    params = jax.tree_util.tree_map(jnp.asarray, params)
+    toks = data.make_lm_dataset(
+        cfg.vocab_size, n_tokens=n_test * (seq_len + 1) + 2, seed=seed
+    )
+    seqs = toks[: n_test * (seq_len + 1)].reshape(n_test, seq_len + 1)
+    x_all = seqs[:, :seq_len].astype(np.int32)
+    y_all = seqs[:, seq_len].astype(np.int64)
+    d = cfg.d_model
+    n_elem = seq_len * d
+    elements_per_packet = -(-n_elem // n_packets)
+
+    def run(batch_toks: jax.Array, masks: jax.Array) -> jax.Array:
+        m = masks.reshape(batch_toks.shape[0], seq_len, d)
+        frac = jnp.maximum(m.mean(axis=(1, 2), keepdims=True), 1e-3)
+
+        def link(a):
+            return a * m.astype(a.dtype) / frac.astype(a.dtype)
+
+        logits, _, _ = lm.forward(
+            params, batch_toks, cfg, link_fn=link, mode="prefill"
+        )
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    run_j = jax.jit(run)
+
+    def fn(pkt_masks: np.ndarray, rids: np.ndarray) -> np.ndarray:
+        pkt_masks = np.asarray(pkt_masks, dtype=bool)
+        rids = np.asarray(rids, dtype=np.int64)
+        idx = rids % n_test
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(jnp.asarray(rids))
+        masks = _expand_packet_masks(
+            pkt_masks, n_elem, elements_per_packet, keys=keys
+        )
+        pred = np.asarray(run_j(jnp.asarray(x_all[idx]), jnp.asarray(masks)))
+        return pred == y_all[idx]
+
+    return fn
+
+
 def accuracy_vs_delivery_curve(
     model: TinyModel,
     fractions: Sequence[float] = (1.0, 0.9, 0.75, 0.6, 0.4, 0.2, 0.05),

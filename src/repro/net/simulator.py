@@ -111,6 +111,7 @@ def run_sim(
     model_in_the_loop: bool = False,
     model=None,
     request_eval_fn: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None,
+    engine: Optional[Callable[[Sequence["_Request"]], float]] = None,
 ) -> SimReport:
     """Run one simulation.
 
@@ -128,6 +129,15 @@ def run_sim(
     (R,) bool`` is used if given, else built from ``model`` (default: the
     lazily trained ``evalhook`` tiny COMtune CNN, request rid -> test
     sample rid mod n_test).
+
+    ``engine`` replaces the analytic server compute-time model with the
+    *live* serve engine: each served batch is handed to
+    ``engine(batch_requests) -> wall_seconds`` (see
+    ``repro.serve.continuous.make_sim_server``) and the measured wall time
+    — real compute, plus real compile behavior the first time a batch hits
+    a new prefill bucket — becomes the server busy time, so the reported
+    p50/p99 include what the hardware actually did.  Composes with
+    ``model_in_the_loop=True`` (mask collection is unchanged).
     """
     rng = np.random.RandomState(cfg.seed)
     channel_cfg = channel_cfg or link_lib.ChannelConfig()
@@ -177,7 +187,10 @@ def run_sim(
         take = server_queue[: cfg.server_batch_max]
         del server_queue[: len(take)]
         batch_sizes.append(len(take))
-        busy = cfg.server_base_s + cfg.server_per_item_s * len(take)
+        if engine is not None:
+            busy = float(engine(take))
+        else:
+            busy = cfg.server_base_s + cfg.server_per_item_s * len(take)
         server_busy = True
         push(now + busy, _SERVER_DONE, take)
 

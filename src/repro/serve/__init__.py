@@ -1,16 +1,35 @@
 """repro.serve — the serving engine layer.
 
-``DecodeEngine`` turns the step builders in ``repro.launch.steps`` into a
-production-shaped serving path: one jit-compiled ``lax.scan`` program per
-(arch, batch, prompt_len, num_tokens, link-spec) signature, cached so
-repeated ``generate()`` calls never re-trace, with donated decode caches
-and compute-accurate (``block_until_ready``) timing.
+Two engines over the step builders in ``repro.launch.steps``:
+
+* ``DecodeEngine`` — the whole-generation scan engine: one AOT-compiled
+  ``lax.scan`` program per (arch, batch, prompt_len, num_tokens, link-spec)
+  signature, cached so repeated ``generate()`` calls never re-trace, with
+  donated decode caches and compute-accurate (``block_until_ready``)
+  timing.  Kept as the batch oracle and benchmark baseline.
+* ``ContinuousEngine`` — the continuous-batching slot-pool engine
+  (``repro.serve.continuous``): a persistent ``max_slots`` pool driven by
+  exactly two kinds of AOT programs (bucketed prefill + one fused decode
+  step), so heterogeneous live traffic runs with zero steady-state
+  recompiles.  This is what ``launch.serve.generate`` rides by default.
 """
 
 from repro.serve.engine import (  # noqa: F401
     CompiledGenerate,
     DecodeEngine,
+    abstract_like,
     default_engine,
     engine_generate,
     generate_key,
+)
+from repro.serve.continuous import (  # noqa: F401
+    ContinuousEngine,
+    PoolConfig,
+    Request,
+    clear_engines,
+    engine_for,
+    make_sim_server,
+    padding_safe,
+    pool_engine,
+    pow2_bucket,
 )

@@ -1,0 +1,548 @@
+"""Continuous-batching serve engine: slot pool + bucketed prefill.
+
+The whole-generation scan engine (``repro.serve.engine``) compiles one
+program per ``(batch, prompt_len, num_tokens)`` signature.  Under live
+multi-client traffic — heterogeneous prompt lengths, Poisson arrivals —
+that is either a recompile storm (one XLA build per new signature) or
+worst-case padding (everyone pays the longest request).  This engine
+replaces the execution model with the standard continuous-batching design:
+
+* a persistent **slot pool** — ``max_slots`` independent batch-1 decode
+  states (``models.cache.init_slot_pool``) plus per-slot scalars (current
+  token, cache length, RNG key chain, generated-token count, budget) and a
+  per-slot output buffer, all living on device across requests;
+* a **bucketed prefill** program per prompt-length bucket (power-of-two
+  padding): runs the padded prompt through the device->link->server stack,
+  selects the first token at the request's *true* last position, and
+  writes the freshly built batch-1 cache + scalars into a free slot
+  (``dynamic_update_slice``; the slot index is data, not shape);
+* ONE fused **decode-step** program: ``vmap`` of the per-token DI serve
+  step over the slot axis — per-slot cache index, per-slot RNG key chain,
+  per-slot lossy-link round, per-slot stop bookkeeping — stepping every
+  in-flight request at once.  Requests join and retire mid-flight without
+  retracing: admission/retirement only changes slot *data*.
+
+Exactness.  Each slot runs the identical math a batch-1
+``generate_reference`` run performs: the prefill's link is the streamed
+per-position round (``core.comtune.streamed_channel_link`` — invariant to
+right padding), causal attention makes padded positions invisible to real
+ones, and the per-slot key chain reproduces the reference's
+``key, sub = split(key)`` sequence.  Greedy outputs are token-for-token
+identical to ``generate_reference(prompt[None], key=request_key)``
+(tests/test_continuous_serve.py, iid + Gilbert-Elliott).
+
+Zero steady-state recompiles.  Every program is AOT-compiled
+(``jit(...).lower(...).compile()``) and stored as a ``jax.stages.Compiled``
+executable, which *cannot* silently re-trace — a signature mismatch raises.
+``engine.compiles`` therefore counts every XLA build exactly: after the
+buckets seen by the workload are warm, it equals ``num_buckets + 1`` and
+never grows again.
+
+Retired slots keep stepping (their updates are select-masked on the scalar
+state, and their cache writes land in positions the attention mask never
+reads before the next admission fully overwrites the slot) — masking the
+cache too would double the HBM traffic of the hot step for nothing.
+
+Models with recurrent layers (mamba/xLSTM) or sliding windows shorter than
+the largest bucket fall back to exact-length buckets: right padding would
+leak into their recurrent/rotating state, so each distinct prompt length
+compiles its own prefill (still compile-cached and AOT).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import make_serve_step
+from repro.models import cache as cache_lib, lm
+from repro.serve.engine import abstract_like
+
+
+def pow2_bucket(n: int, floor: int = 8) -> int:
+    b = max(floor, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def padding_safe(cfg: ModelConfig, max_bucket: int) -> bool:
+    """True when right-padding a prompt to ``max_bucket`` cannot change the
+    real positions' outputs or decode state: attention-only stacks (causal
+    masking ignores right padding) whose sliding windows, if any, are at
+    least as long as the largest bucket (so the rotating prefill write
+    never evicts real positions because of padding)."""
+    for s in cfg.all_layers():
+        if s.kind != "attn":
+            return False
+        if s.window and s.window < max_bucket:
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static shape/behavior of one slot pool (one compile signature)."""
+
+    max_slots: int = 8
+    max_new: int = 64            # per-request generation budget ceiling
+    max_prompt: int = 128        # longest admissible prompt
+    min_bucket: int = 8          # smallest prefill bucket (power-of-two grid)
+    greedy: bool = True
+    temperature: float = 1.0
+
+    @property
+    def max_bucket(self) -> int:
+        return pow2_bucket(self.max_prompt, self.min_bucket)
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_bucket + self.max_new
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight generation request."""
+
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_tokens: int
+    key: jax.Array                # (2,) uint32 — the per-request RNG chain
+    tokens: Optional[np.ndarray] = None   # (max_tokens,) int32 when done
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.tokens is not None
+
+
+class ContinuousEngine:
+    """Slot-pooled continuous-batching engine for one model config."""
+
+    def __init__(self, cfg: ModelConfig, pool: Optional[PoolConfig] = None):
+        assert not cfg.frontend, (
+            "frontend (VLM/audio) configs are not supported by the slot-pool "
+            "engine yet — use the whole-generation DecodeEngine"
+        )
+        self.cfg = cfg
+        self.pool = pool or PoolConfig()
+        self._padded = padding_safe(cfg, self.pool.max_bucket)
+        # Device state + AOT executables (built lazily on first use, since
+        # they need the parameter shapes).
+        self._state: Optional[Dict[str, Any]] = None
+        self._decode_fn = None
+        self._prefill_fns: Dict[int, Any] = {}
+        # Host-side mirrors (scheduling never reads device memory).
+        self._queue: collections.deque = collections.deque()
+        self._slot_req: List[Optional[Request]] = [None] * self.pool.max_slots
+        self._remaining: List[int] = [0] * self.pool.max_slots
+        self._free: List[int] = list(range(self.pool.max_slots))
+        self._pending_harvest: List[Tuple[int, Request]] = []
+        self._finished: List[Request] = []
+        self._rid = 0
+        # Counters / stats.
+        self.compiles = 0
+        self.traces = 0
+        self.compile_s = 0.0
+        self.steps = 0
+        self.busy_slot_steps = 0
+        self.tokens_generated = 0
+
+    # -- static program construction --------------------------------------
+
+    def _aot(self, fn, donate: Tuple[int, ...], avals: Tuple) -> Any:
+        """jit -> lower -> compile; returns the Compiled executable and
+        bumps the engine-wide compile/trace accounting."""
+
+        def traced(*args):
+            self.traces += 1     # Python side effect: fires at trace time
+            return fn(*args)
+
+        t0 = time.perf_counter()
+        compiled = jax.jit(traced, donate_argnums=donate).lower(*avals).compile()
+        self.compile_s += time.perf_counter() - t0
+        self.compiles += 1
+        return compiled
+
+    def _init_state(self) -> Dict[str, Any]:
+        p = self.pool
+        return {
+            "cache": cache_lib.init_slot_pool(self.cfg, p.max_slots, p.max_seq),
+            "token": jnp.zeros((p.max_slots, 1, 1), jnp.int32),
+            "length": jnp.zeros((p.max_slots,), jnp.int32),
+            "key": jnp.zeros((p.max_slots, 2), jnp.uint32),
+            "n_gen": jnp.zeros((p.max_slots,), jnp.int32),
+            "budget": jnp.zeros((p.max_slots,), jnp.int32),
+            "out": jnp.zeros((p.max_slots, p.max_new), jnp.int32),
+        }
+
+    def _make_decode_step(self):
+        cfg, pool = self.cfg, self.pool
+        step = make_serve_step(cfg)
+
+        def pool_step(params, state):
+            def one(token, cache, length, key, n_gen, budget, out_row):
+                # Mirrors one iteration of the reference per-token loop at
+                # batch 1: emit the carried token, split the slot's key,
+                # run the DI round, select the next token.
+                live = n_gen < budget
+                if pool.greedy:
+                    key2, sub = jax.random.split(key)
+                    logits, new_cache = step(params, token, cache, length, sub)
+                    nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+                else:
+                    key2, sub, ks = jax.random.split(key, 3)
+                    logits, new_cache = step(params, token, cache, length, sub)
+                    scaled = logits.astype(jnp.float32) / jnp.float32(
+                        max(pool.temperature, 1e-6)
+                    )
+                    nxt = jax.random.categorical(ks, scaled, axis=-1)[
+                        :, None
+                    ].astype(jnp.int32)
+                out2 = jax.lax.dynamic_update_slice(out_row, token[0], (n_gen,))
+                sel = lambda a, b: jnp.where(live, a, b)
+                # NOTE: new_cache is NOT select-masked — a retired slot's
+                # dirty write lands at its frozen length (never read past
+                # the attention validity mask) and the next admission
+                # overwrites the whole slot.  Masking would double the HBM
+                # traffic of the hot step.
+                return (
+                    sel(nxt, token),
+                    new_cache,
+                    sel(length + 1, length),
+                    sel(key2, key),
+                    sel(n_gen + 1, n_gen),
+                    sel(out2, out_row),
+                )
+
+            token, cache, length, key, n_gen, out = jax.vmap(one)(
+                state["token"], state["cache"], state["length"],
+                state["key"], state["n_gen"], state["budget"], state["out"],
+            )
+            return {
+                "cache": cache, "token": token, "length": length,
+                "key": key, "n_gen": n_gen, "budget": state["budget"],
+                "out": out,
+            }
+
+        return pool_step
+
+    def _make_prefill(self, bucket: int):
+        cfg, pool = self.cfg, self.pool
+
+        def prefill(params, state, prompt, true_len, slot, budget, rkey):
+            # Reference chain: key, sub = split(request_key); prefill(sub).
+            key, sub = jax.random.split(rkey)
+            fresh = cache_lib.init_cache(cfg, 1, pool.max_seq)
+            logits, filled, _ = lm.forward(
+                params, prompt, cfg,
+                cache=fresh, cache_index=0,
+                link_key=sub, link_mode="serve", mode="prefill",
+            )
+            last = jax.lax.dynamic_slice(
+                logits, (0, true_len - 1, 0), (1, 1, logits.shape[-1])
+            )[:, 0]                                   # (1, V): true last pos
+            if pool.greedy:
+                tok0 = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            else:
+                key, ks = jax.random.split(key)
+                scaled = last.astype(jnp.float32) / jnp.float32(
+                    max(pool.temperature, 1e-6)
+                )
+                tok0 = jax.random.categorical(ks, scaled, axis=-1)[
+                    :, None
+                ].astype(jnp.int32)
+            set1 = lambda arr, v: arr.at[slot].set(v)
+            return {
+                "cache": cache_lib.write_slot(state["cache"], filled, slot),
+                "token": jax.lax.dynamic_update_slice(
+                    state["token"], tok0[None], (slot, 0, 0)
+                ),
+                "length": set1(state["length"], true_len),
+                "key": set1(state["key"], key),
+                "n_gen": set1(state["n_gen"], jnp.int32(0)),
+                "budget": set1(state["budget"], budget),
+                "out": jax.lax.dynamic_update_slice(
+                    state["out"],
+                    jnp.zeros((1, pool.max_new), jnp.int32),
+                    (slot, 0),
+                ),
+            }
+
+        return prefill
+
+    def _ensure(self, params) -> None:
+        if self._state is None:
+            self._state = self._init_state()
+        if self._decode_fn is None:
+            avals = (abstract_like(params), abstract_like(self._state))
+            self._decode_fn = self._aot(self._make_decode_step(), (1,), avals)
+
+    def _prefill_for(self, params, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            scalar = jax.ShapeDtypeStruct((), jnp.int32)
+            avals = (
+                abstract_like(params),
+                abstract_like(self._state),
+                jax.ShapeDtypeStruct((1, bucket), jnp.int32),
+                scalar, scalar, scalar,
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+            )
+            fn = self._aot(self._make_prefill(bucket), (1,), avals)
+            self._prefill_fns[bucket] = fn
+        return fn
+
+    # -- scheduling --------------------------------------------------------
+
+    def bucket_for(self, length: int) -> int:
+        if self._padded:
+            return pow2_bucket(length, self.pool.min_bucket)
+        return length
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self._prefill_fns)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    def submit(
+        self, prompt, max_tokens: int, key: Optional[jax.Array] = None
+    ) -> Request:
+        """Queue one request; returns its handle (filled in by run())."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert 1 <= prompt.size <= self.pool.max_prompt, (
+            prompt.size, self.pool.max_prompt
+        )
+        assert 1 <= max_tokens <= self.pool.max_new, (
+            max_tokens, self.pool.max_new
+        )
+        if key is None:
+            key = jax.random.PRNGKey(self._rid)
+        req = Request(
+            rid=self._rid, prompt=prompt, max_tokens=int(max_tokens),
+            key=jnp.asarray(key, jnp.uint32), t_submit=time.perf_counter(),
+        )
+        self._rid += 1
+        self._queue.append(req)
+        return req
+
+    def _harvest(self) -> None:
+        if not self._pending_harvest:
+            return
+        out = np.asarray(self._state["out"])    # one sync for the batch
+        for slot, req in self._pending_harvest:
+            req.tokens = out[slot, : req.max_tokens].copy()
+        self._pending_harvest.clear()
+
+    def _admit(self, params) -> None:
+        while self._queue and self._free:
+            if self._pending_harvest:
+                # A freed slot's output row is about to be zeroed: read the
+                # finished requests first (one host sync for all of them).
+                self._harvest()
+            req = self._queue.popleft()
+            slot = self._free.pop()
+            bucket = self.bucket_for(req.prompt.size)
+            fn = self._prefill_for(params, bucket)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, : req.prompt.size] = req.prompt
+            self._state = fn(
+                params, self._state, jnp.asarray(padded),
+                jnp.asarray(req.prompt.size, jnp.int32),
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(req.max_tokens, jnp.int32),
+                req.key,
+            )
+            self._slot_req[slot] = req
+            self._remaining[slot] = req.max_tokens
+            req.t_admit = time.perf_counter()
+
+    def _decode_once(self, params) -> None:
+        self._state = self._decode_fn(params, self._state)
+        self.steps += 1
+        completed = []
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            self.busy_slot_steps += 1
+            self.tokens_generated += 1
+            self._remaining[slot] -= 1
+            if self._remaining[slot] == 0:
+                completed.append((slot, req))
+                self._slot_req[slot] = None
+                self._free.append(slot)
+        if completed:
+            # Block before stamping t_done: dispatch is async, so a
+            # dispatch-time stamp would under-report completion latency
+            # whenever execution lags the host (the sync only happens on
+            # completion steps, so steady-state steps still pipeline).
+            jax.block_until_ready(self._state["out"])
+            now = time.perf_counter()
+            for slot, req in completed:
+                req.t_done = now
+                self._pending_harvest.append((slot, req))
+                self._finished.append(req)
+
+    def step(self, params) -> None:
+        """One scheduler tick: admit from the queue into free slots, then
+        run one fused decode step over the pool (if anything is live)."""
+        self._ensure(params)
+        self._admit(params)
+        if self.active:
+            self._decode_once(params)
+
+    def run(self, params) -> List[Request]:
+        """Drive until the queue and the pool are empty; returns every
+        request finished since the last run (harvested, ``tokens`` filled)."""
+        self._ensure(params)
+        while self._queue or self.active:
+            self.step(params)
+        self._harvest()
+        done, self._finished = self._finished, []
+        return done
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "compiles": self.compiles,
+            "traces": self.traces,
+            "compile_s": self.compile_s,
+            "num_buckets": self.num_buckets,
+            "steps": self.steps,
+            "tokens_generated": self.tokens_generated,
+            "slot_occupancy": self.busy_slot_steps
+            / max(1, self.steps * self.pool.max_slots),
+        }
+
+    # -- one-shot batch API (launch.serve.generate rides this) -------------
+
+    def generate_batch(
+        self,
+        params,
+        prompts,                  # (B, S) int32
+        num_tokens: int,
+        *,
+        key: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, float]]:
+        """Serve a same-length batch as B independent requests with keys
+        ``fold_in(key, i)``.  Per request, greedy output is token-identical
+        to ``generate_reference(prompts[i:i+1], key=fold_in(key, i))`` —
+        each request is its own DI stream, which is the multi-client
+        semantics (the whole-generation engine instead draws one joint
+        link mask across the batch)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompts = np.asarray(prompts, np.int32)
+        b = prompts.shape[0]
+        compiles_before, compile_s_before = self.compiles, self.compile_s
+        reqs = [
+            self.submit(prompts[i], num_tokens, key=jax.random.fold_in(key, i))
+            for i in range(b)
+        ]
+        t0 = time.perf_counter()
+        self.run(params)
+        t_total = time.perf_counter() - t0
+        compile_s = self.compile_s - compile_s_before
+        exec_s = max(t_total - compile_s, 1e-9)
+        tokens = jnp.asarray(np.stack([r.tokens for r in reqs]))
+        timings = {
+            "generate_s": exec_s,
+            "decode_s_per_token": exec_s / max(1, num_tokens),
+            "tokens_per_s": (b * num_tokens) / exec_s,
+            "traces": float(self.traces),
+            "compiles": float(self.compiles),
+            "compile_s": compile_s,
+            "compiled_this_call": float(self.compiles > compiles_before),
+            "slot_occupancy": self.stats()["slot_occupancy"],
+        }
+        return tokens, timings
+
+
+# ---------------------------------------------------------------------------
+# Process-wide engine registry (mirrors serve.default_engine)
+# ---------------------------------------------------------------------------
+
+_ENGINES: Dict[Tuple, ContinuousEngine] = {}
+_MAX_ENGINES = 4      # each engine retains a device slot pool; bound the set
+
+
+def pool_engine(cfg: ModelConfig, pool: Optional[PoolConfig] = None) -> ContinuousEngine:
+    """Engine per (cfg, pool) — the slot pool and its compiled programs
+    survive across callers, which is the whole point.  The registry is a
+    small LRU: every distinct cfg (each loss-rate/channel override bakes a
+    new one) holds a full device slot pool, so e.g. a loss-rate sweep must
+    not accumulate pools without bound.  An evicted engine keeps working
+    for anyone still holding it; it just stops being shared."""
+    pool = pool or PoolConfig()
+    k = (cfg, pool)
+    if k in _ENGINES:
+        _ENGINES[k] = _ENGINES.pop(k)          # refresh LRU position
+        return _ENGINES[k]
+    while len(_ENGINES) >= _MAX_ENGINES:
+        _ENGINES.pop(next(iter(_ENGINES)))
+    _ENGINES[k] = ContinuousEngine(cfg, pool)
+    return _ENGINES[k]
+
+
+def engine_for(
+    cfg: ModelConfig, prompt_len: int, num_tokens: int
+) -> ContinuousEngine:
+    """Engine whose pool covers (prompt_len, num_tokens), with both
+    dimensions rounded to powers of two so repeated one-shot ``generate()``
+    calls with nearby signatures coalesce onto one pool."""
+    pool = PoolConfig(
+        max_prompt=pow2_bucket(prompt_len),
+        max_new=pow2_bucket(num_tokens, 16),
+    )
+    return pool_engine(cfg, pool)
+
+
+def clear_engines() -> None:
+    _ENGINES.clear()
+
+
+# ---------------------------------------------------------------------------
+# Simulator bridge: serve a sim batch through the live engine
+# ---------------------------------------------------------------------------
+
+def make_sim_server(
+    engine: ContinuousEngine,
+    params,
+    *,
+    prompt_lens: Sequence[int] = (8, 16, 32),
+    num_tokens: int = 8,
+    seed: int = 0,
+):
+    """Adapter for ``net.simulator.run_sim(engine=...)``: maps each sim
+    request (by rid, deterministically) to a synthetic prompt whose length
+    cycles through ``prompt_lens`` (>= 3 buckets by default), serves the
+    batch through the live engine, and returns the measured wall seconds —
+    so the simulator's reported p50/p99 include real compute *and* real
+    compile behavior (the first batch hitting a new bucket pays its AOT
+    build, steady state pays none)."""
+    vocab = engine.cfg.vocab_size
+    base = jax.random.PRNGKey(seed)
+
+    def serve_batch(reqs) -> float:
+        t0 = time.perf_counter()
+        for r in reqs:
+            rid = int(r.rid)
+            length = int(prompt_lens[rid % len(prompt_lens)])
+            prompt = np.random.RandomState(seed + rid).randint(
+                0, vocab, size=(length,)
+            ).astype(np.int32)
+            engine.submit(prompt, num_tokens, key=jax.random.fold_in(base, rid))
+        engine.run(params)
+        return time.perf_counter() - t0
+
+    return serve_batch

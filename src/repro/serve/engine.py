@@ -17,8 +17,17 @@ with:
   repeated calls with the same signature never re-trace;
 * a donated decode cache (the scan carry reuses the input buffers instead
   of copying the KV/SSM state);
-* per-entry trace and call counters, so callers (benchmarks, CI) can
-  assert "exactly one trace across N calls".
+* ahead-of-time compilation: a cache miss runs ``jit(...).lower(abstract
+  args).compile()`` and stores the resulting ``jax.stages.Compiled``
+  executable.  Calling a ``Compiled`` can never silently re-trace or
+  re-compile (a signature mismatch raises instead), so the first
+  ``generate()`` call's timed region is pure execution with no warm-up
+  run, and "zero steady-state recompiles" holds by construction;
+* per-entry trace / compile / call counters, so callers (benchmarks, CI)
+  can assert "exactly one trace and one XLA build across N calls".
+
+The continuous-batching slot-pool engine built on the same AOT machinery
+lives in ``repro.serve.continuous``.
 """
 
 from __future__ import annotations
@@ -52,15 +61,23 @@ def generate_key(
     return (cfg, batch, prompt_len, num_tokens, greedy, temp)
 
 
+def abstract_like(tree):
+    """ShapeDtypeStruct skeleton of a concrete pytree (AOT lowering input)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), tree
+    )
+
+
 @dataclasses.dataclass
 class CompiledGenerate:
-    """One cached jit program + its usage counters."""
+    """One cached AOT executable + its usage counters."""
 
-    fn: Callable
+    fn: Callable                     # jax.stages.Compiled
     key: Tuple
     traces: int = 0
+    compiles: int = 0
     calls: int = 0
-    compile_s: float = 0.0   # wall time of this entry's warm-up (trace+compile)
+    compile_s: float = 0.0   # wall time of this entry's AOT lower+compile
 
 
 class DecodeEngine:
@@ -79,23 +96,42 @@ class DecodeEngine:
         num_tokens: int,
         greedy: bool = True,
         temperature: float = 1.0,
+        *,
+        params=None,
     ) -> CompiledGenerate:
         key = generate_key(cfg, batch, prompt_len, num_tokens, greedy, temperature)
         entry = self._compiled.get(key)
         if entry is not None:
             return entry
+        assert params is not None, "a compile-cache miss needs params (shapes)"
         gen_fn = make_generate_fn(
             cfg, num_tokens, greedy=greedy, temperature=temperature
         )
         entry = CompiledGenerate(fn=None, key=key)  # type: ignore[arg-type]
 
         def traced(params, prompts, cache, rng):
-            # Python side effect fires at trace time only — this is the
-            # trace counter the CI smoke test asserts on.
+            # Python side effect fires at trace time only (during lower());
+            # this is the trace counter the CI smoke test asserts on.
             entry.traces += 1
             return gen_fn(params, prompts, cache, rng)
 
-        entry.fn = jax.jit(traced, donate_argnums=(2,))
+        # AOT: lower + compile against abstract inputs, store the Compiled
+        # executable.  A Compiled cannot silently re-trace — the first real
+        # call runs the prebuilt program, so first-call timings are pure
+        # execution (the old warm-up-by-execution run is gone).
+        t0 = time.perf_counter()
+        jitted = jax.jit(traced, donate_argnums=(2,))
+        cache_s = jax.eval_shape(
+            lambda: cache_lib.init_cache(cfg, batch, prompt_len + num_tokens)
+        )
+        entry.fn = jitted.lower(
+            abstract_like(params),
+            jax.ShapeDtypeStruct((batch, prompt_len), jnp.int32),
+            cache_s,
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        ).compile()
+        entry.compiles += 1
+        entry.compile_s = time.perf_counter() - t0
         self._compiled[key] = entry
         return entry
 
@@ -109,10 +145,14 @@ class DecodeEngine:
     def total_traces(self) -> int:
         return sum(e.traces for e in self._compiled.values())
 
+    def total_compiles(self) -> int:
+        return sum(e.compiles for e in self._compiled.values())
+
     def stats(self) -> Dict[str, Any]:
         return {
             "entries": self.num_compiled,
             "traces": self.total_traces(),
+            "compiles": self.total_compiles(),
             "calls": sum(e.calls for e in self._compiled.values()),
         }
 
@@ -131,34 +171,29 @@ class DecodeEngine:
     ) -> Tuple[jax.Array, Dict[str, float]]:
         """One generation: returns ((B, num_tokens) int32, timings).
 
-        A new signature is warmed up (traced + compiled + run once) before
-        the timed run, so ``timings['generate_s']`` is the blocked wall
-        time of pure execution — compute, never dispatch or compile —
-        on every call including the first.  ``timings['compile_s']`` is
-        the signature's one-off warm-up cost (0.0 on cache hits);
-        ``timings['decode_s_per_token']`` is the whole call (prefill + all
-        rounds) divided by ``num_tokens``.  The fresh decode caches built
-        here are donated to the jit program.
+        A new signature is AOT-compiled (``jit(...).lower(...).compile()``)
+        on the cache miss, so ``timings['generate_s']`` is the blocked wall
+        time of pure execution — compute, never dispatch or compile — on
+        every call including the first: the stored ``Compiled`` executable
+        cannot silently re-trace, there is no second hidden compile on the
+        first real call and no throwaway warm-up run.
+        ``timings['compile_s']`` is the signature's one-off AOT cost (0.0
+        on cache hits); ``timings['decode_s_per_token']`` is the whole call
+        (prefill + all rounds) divided by ``num_tokens``.  The fresh decode
+        caches built here are donated to the compiled program.
         """
         key = key if key is not None else jax.random.PRNGKey(0)
+        key = jnp.asarray(key, jnp.uint32)
+        prompts = jnp.asarray(prompts, jnp.int32)
         b, s_prompt = prompts.shape
-        entry = self.get_compiled(
-            cfg, b, s_prompt, num_tokens, greedy=greedy, temperature=temperature
+        compiled_this_call = (
+            generate_key(cfg, b, s_prompt, num_tokens, greedy, temperature)
+            not in self._compiled
         )
-        compiled_this_call = entry.traces == 0
-        if compiled_this_call:
-            # Warm-up by execution: pay trace + compile (plus one
-            # throwaway run) here so steady-state timings never include
-            # them.  AOT ``fn.lower(...).compile()`` would avoid the extra
-            # run, but on jax 0.4.37 it only prewarms the *trace* cache —
-            # the first normal call still recompiles the executable
-            # (measured ~1.3 s vs ~0.1 s steady state), so execution
-            # warm-up is the only way to keep generate_s pure.
-            cache = cache_lib.init_cache(cfg, b, s_prompt + num_tokens)
-            t0 = time.perf_counter()
-            tokens, _ = entry.fn(params, prompts, cache, key)
-            jax.block_until_ready(tokens)
-            entry.compile_s = time.perf_counter() - t0
+        entry = self.get_compiled(
+            cfg, b, s_prompt, num_tokens, greedy=greedy,
+            temperature=temperature, params=params,
+        )
         cache = cache_lib.init_cache(cfg, b, s_prompt + num_tokens)
         t0 = time.perf_counter()
         tokens, final_cache = entry.fn(params, prompts, cache, key)

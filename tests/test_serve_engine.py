@@ -123,6 +123,28 @@ class TestCompileCache:
         assert default_engine() is default_engine()
 
 
+class TestAOTCompile:
+    def test_entries_are_compiled_executables_no_silent_recompile(self):
+        """A cache miss AOT-compiles (lower().compile()) and stores the
+        Compiled stage: exactly one trace and one XLA build per signature,
+        no warm-up execution, and later calls *cannot* silently re-trace
+        (a Compiled raises on signature mismatch instead)."""
+        cfg, params, prompts = _setup()
+        engine = DecodeEngine()
+        _, t1 = engine.generate(params, cfg, prompts, 3)
+        entry = next(iter(engine._compiled.values()))
+        assert isinstance(entry.fn, jax.stages.Compiled)
+        assert entry.traces == 1
+        assert entry.compiles == 1
+        assert t1["compiled_this_call"] == 1.0
+        _, t2 = engine.generate(params, cfg, prompts, 3)
+        assert entry.traces == 1
+        assert entry.compiles == 1
+        assert engine.total_compiles() == 1
+        assert t2["compile_s"] == 0.0
+        assert engine.stats()["compiles"] == 1
+
+
 class TestComputeTiming:
     def test_reference_timing_includes_injected_compute(self, monkeypatch):
         """Sleep-injected serve step: per-token compute of ~delay seconds
