@@ -109,9 +109,17 @@ class ModelConfig:
     kv_cache_dtype: str = ""        # "" = model dtype; "int8" = quantized KV
                                     # (+per-(pos,head) bf16 scales) — §Perf 3
     remat: bool = True
-    attn_impl: str = "blockwise"    # naive | blockwise
+    # naive | blockwise | flash_decode.  Train/prefill: blockwise and
+    # flash_decode both run the blocked online-softmax; naive materializes
+    # scores.  Decode (s == 1): blockwise and flash_decode run the
+    # length-masked flash-decode path (repro.kernels.decode_attention —
+    # O(valid) cache blocks, inline int8 dequant); naive keeps the
+    # full-cache masked matvec as the oracle.
+    attn_impl: str = "blockwise"
     attn_block_q: int = 512
     attn_block_kv: int = 1024
+    attn_decode_block_kv: int = 64  # KV block of the masked decode walk —
+                                    # decode reads ceil(valid/this) blocks
     scan_chunk: int = 256           # mamba/mlstm chunked-scan length
 
     # ----- derived -----

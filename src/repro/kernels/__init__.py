@@ -1,8 +1,18 @@
 """Pallas TPU kernels for the perf-critical hot spots, each validated in
 interpret mode against a pure-jnp oracle (ref.py):
 
-* ``lossy_link``      — fused split-point egress (quantize+mask+dequantize+
-                        compensate), the paper's per-DI-round hot path;
-* ``flash_attention`` — blocked online-softmax attention w/ sliding window;
-* ``ssm_scan``        — chunked linear recurrence for Mamba/mLSTM states.
+* ``lossy_link``       — fused split-point egress (quantize+mask+dequantize+
+                         compensate), the paper's per-DI-round hot path;
+* ``flash_attention``  — blocked online-softmax attention w/ sliding window
+                         (train/prefill, Sq > 1);
+* ``decode_attention`` — length-masked flash decode for the s == 1 step:
+                         only cache blocks below the request's valid length
+                         are read, int8 KV dequantized inline per block;
+* ``ssm_scan``         — chunked linear recurrence for Mamba/mLSTM states.
+
+Interpret-vs-compile policy is shared (``kernels.runtime.pallas_interpret``):
+interpret exactly on CPU, compile on GPU/TPU, overridable via
+``REPRO_PALLAS_INTERPRET``.  See ``kernels/README.md``.
 """
+
+from repro.kernels.runtime import pallas_interpret  # noqa: F401

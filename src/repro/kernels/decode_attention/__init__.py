@@ -1,0 +1,13 @@
+from repro.kernels.decode_attention.kernel import flash_decode_kernel
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    decode_block_kv,
+)
+from repro.kernels.decode_attention.ref import flash_decode_ref
+
+__all__ = [
+    "decode_attention",
+    "decode_block_kv",
+    "flash_decode_kernel",
+    "flash_decode_ref",
+]

@@ -1,0 +1,153 @@
+"""Flash-decode forward kernel (Pallas): length-masked online-softmax
+attention for the s == 1 decode step, with inline int8 dequantization.
+
+Shapes follow the decode cache's native layout so no transpose/copy of the
+cache is ever materialized:
+
+* q        — (B, KV, G, hd)   one query token, GQA-grouped
+* k / v    — (B, C, KV, hd)   rotating cache buffer (int8 codes or bf16)
+* k/v scale— (B, C, KV)       per-(pos, head) bf16 absmax scales (int8 only)
+* n_valid  — (B, 1) int32     count of live cache slots for this request
+
+Grid: (B, KV) — one grid step per (request, kv-head).  The kernel holds
+the (G, hd) query tile plus the (C, hd) K/V panels for that head
+(BlockSpec-delivered, strided view of the native (B, C, KV, hd) buffer)
+and walks KV blocks with a ``fori_loop`` whose upper bound is
+``ceil(n_valid / block_kv)`` — blocks past the valid prefix are never
+*computed on or dequantized*, which turns the decode step's FLOPs and
+dequant work from O(max_seq) into O(valid).  Caveat on *memory* traffic:
+with this portable BlockSpec a compiled TPU run still DMAs the full
+(C, hd) panel into VMEM before the body runs, so the O(valid) HBM-bytes
+claim currently holds for the jnp fallback (``ref.py`` — XLA dynamic
+slices read only the walked blocks), while TPU gets the compute/dequant
+saving; closing the DMA gap needs a scalar-prefetch (SMEM) ``n_valid``
+with a block-clamped ``index_map`` — the ROADMAP PR-5 follow-up.
+Rotating sliding-window caches need no extra handling: writes
+land at ``index % C`` (``models.attention._write_decode``), so the live
+slots are always the contiguous prefix ``[0, min(index + 1, C))`` — once
+the window wraps, ``n_valid == C`` and the masked walk degenerates to the
+full (bounded) window.  Cached keys carry RoPE from write time and softmax
+is permutation-invariant over slots, so slot order never matters.
+
+Inline dequantization: int8 codes are loaded per block and scaled in
+VMEM/registers (``codes_f32 * scale_f32``), so the quantized cache is
+never expanded to bf16 in HBM — the full-cache ``_read_cache`` dequant
+this kernel replaces was the dominant decode-step HBM traffic.
+
+The kernel is vmap-able (the slot-pool engine vmaps it over the slot axis
+with a per-slot ``n_valid``); ``ref.py`` mirrors this file's f32
+arithmetic op for op, so the pure-jnp fallback agrees with the
+interpret-mode kernel to float-ulp level (tests pin ~2e-6; XLA fusion
+reassociation is the only difference).
+
+``n_valid`` rides as a (1, 1) int32 VMEM block per grid step; the
+portable spec keeps one code path for interpret/Triton/Mosaic (see the
+memory-traffic caveat above for what a TPU SMEM prefetch would add).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import pallas_interpret
+
+NEG_INF = -1.0e30
+
+
+def _make_kernel(*, block_kv: int, softcap: float, quantized: bool):
+    def kernel(*refs):
+        if quantized:
+            q_ref, k_ref, v_ref, ks_ref, vs_ref, n_ref, o_ref = refs
+        else:
+            q_ref, k_ref, v_ref, n_ref, o_ref = refs
+            ks_ref = vs_ref = None
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        g, hd = q.shape
+        scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+        n_valid = n_ref[0, 0]
+        n_blocks = (n_valid + block_kv - 1) // block_kv
+
+        def body(kj, carry):
+            acc, m, l = carry
+            sl = pl.dslice(kj * block_kv, block_kv)
+            k = k_ref[0, sl, 0, :].astype(jnp.float32)       # (bkv, hd)
+            v = v_ref[0, sl, 0, :].astype(jnp.float32)
+            if quantized:
+                k = k * ks_ref[0, sl, 0].astype(jnp.float32)[:, None]
+                v = v * vs_ref[0, sl, 0].astype(jnp.float32)[:, None]
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale                                        # (G, bkv)
+            if softcap > 0.0:
+                s = jnp.tanh(s / softcap) * softcap
+            k_pos = kj * block_kv + jax.lax.iota(jnp.int32, block_kv)
+            msk = (k_pos < n_valid)[None, :]
+            s = jnp.where(msk, s, NEG_INF)
+            s_max = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, s_max)
+            p = jnp.exp(s - m_new[:, None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            return acc * corr[:, None] + pv, m_new, l_new
+
+        acc0 = jnp.zeros((g, hd), jnp.float32)
+        m0 = jnp.full((g,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((g,), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "softcap", "interpret")
+)
+def flash_decode_kernel(
+    q: jax.Array,                        # (B, KV, G, hd)
+    k: jax.Array,                        # (B, C, KV, hd) int8 or bf16/f32
+    v: jax.Array,
+    k_scale: Optional[jax.Array],        # (B, C, KV) or None
+    v_scale: Optional[jax.Array],
+    n_valid: jax.Array,                  # (B, 1) int32
+    *,
+    block_kv: int = 64,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, kvh, g, hd = q.shape
+    c = k.shape[1]
+    assert c % block_kv == 0, (c, block_kv)
+    quantized = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda i, h: (i, h, 0, 0)),
+        pl.BlockSpec((1, c, 1, hd), lambda i, h: (i, 0, h, 0)),
+        pl.BlockSpec((1, c, 1, hd), lambda i, h: (i, 0, h, 0)),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, c, 1), lambda i, h: (i, 0, h)),
+            pl.BlockSpec((1, c, 1), lambda i, h: (i, 0, h)),
+        ]
+        args += [k_scale, v_scale]
+    in_specs.append(pl.BlockSpec((1, 1), lambda i, h: (i, 0)))
+    args.append(n_valid)
+    return pl.pallas_call(
+        _make_kernel(block_kv=block_kv, softcap=softcap, quantized=quantized),
+        grid=(b, kvh),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, h: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=pallas_interpret(interpret),
+    )(*args)

@@ -15,10 +15,13 @@ head_dim is the matmul contraction dim.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import pallas_interpret
 
 NEG_INF = -1.0e30
 
@@ -111,7 +114,7 @@ def flash_attention_kernel(
     block_q: int = 128,
     block_kv: int = 128,
     softcap: float = 0.0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     bh, sq, hd = q.shape
     skv = k.shape[1]
@@ -148,6 +151,6 @@ def flash_attention_kernel(
         ],
         out_specs=pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        interpret=interpret,
+        interpret=pallas_interpret(interpret),
     )(q, k, v)
     return out[:, :sq]

@@ -1,4 +1,8 @@
-"""Jitted GQA-aware wrapper around the flash-attention Pallas kernel."""
+"""Jitted GQA-aware wrapper around the flash-attention Pallas kernel.
+
+Interpret-vs-compile is resolved by the kernel itself via
+``kernels.runtime.pallas_interpret`` (CPU interprets, GPU/TPU compile,
+``REPRO_PALLAS_INTERPRET`` overrides)."""
 
 from __future__ import annotations
 
@@ -6,10 +10,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def flash_attention(
@@ -45,6 +45,5 @@ def flash_attention(
         block_q=block_q,
         block_kv=block_kv,
         softcap=softcap,
-        interpret=_use_interpret(),
     )
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -20,10 +20,13 @@ axis.  block_d is a multiple of 128 (VPU lane width).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import pallas_interpret
 
 
 def _egress_kernel(
@@ -98,7 +101,7 @@ def burst_mask_kernel(
     loss_good: float,
     loss_bad: float,
     block_r: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """(R, N) float32 Gilbert–Elliott packet keep-masks, bit-exact against
     ``ref.burst_mask_ref`` for identical uniforms."""
@@ -125,7 +128,7 @@ def burst_mask_kernel(
         ],
         out_specs=pl.BlockSpec((br, np_), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rp, np_), jnp.float32),
-        interpret=interpret,
+        interpret=pallas_interpret(interpret),
     )(u_init.astype(jnp.float32), u_loss.astype(jnp.float32),
       u_tr.astype(jnp.float32))
     return out[:r, :n]
@@ -144,7 +147,7 @@ def lossy_link_egress_kernel(
     loss_rate: float,
     block_t: int = 256,
     block_d: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     t, d = x.shape
     bt = min(block_t, t)
@@ -168,6 +171,6 @@ def lossy_link_egress_kernel(
         ],
         out_specs=pl.BlockSpec((bt, bd), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        interpret=interpret,
+        interpret=pallas_interpret(interpret),
     )(x, u, s_min, s_max)
     return out[:t, :d]

@@ -12,10 +12,6 @@ from repro.kernels.lossy_link.kernel import (
 )
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def lossy_link_egress(
     key: jax.Array,
     x: jax.Array,           # (..., D) split-point activation
@@ -34,7 +30,6 @@ def lossy_link_egress(
         quant.s_max.astype(jnp.float32),
         bits=quant.bits,
         loss_rate=float(loss_rate),
-        interpret=_use_interpret(),
     )
     return out.reshape(shape)
 
@@ -62,5 +57,4 @@ def burst_mask(
         u_init, u_loss, u_tr,
         p_gb=float(p_gb), p_bg=float(p_bg),
         loss_good=float(loss_good), loss_bad=float(loss_bad),
-        interpret=_use_interpret(),
     )

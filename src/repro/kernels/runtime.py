@@ -1,0 +1,54 @@
+"""Shared execution-mode policy for the Pallas kernel packages.
+
+Every kernel entry point takes ``interpret: Optional[bool] = None`` and
+resolves ``None`` through :func:`pallas_interpret`:
+
+* ``REPRO_PALLAS_INTERPRET=1/0`` (or true/false/yes/no/on/off) forces the
+  mode process-wide — the escape hatch CI and kernel-equivalence tests use;
+* otherwise compile exactly when ``jax.default_backend()`` is in the
+  kernel's ``compiled_on`` set and interpret everywhere else.  CPU has no
+  Pallas lowering, so it always interprets.  The default set is
+  ``("tpu", "gpu")``; kernels that are TPU-only — e.g. ``ssm_scan``, whose
+  correctness relies on TPU's *sequential* grid execution and whose
+  ``pltpu.VMEM`` scratch has no Triton lowering — pass
+  ``compiled_on=("tpu",)`` so GPU falls back to interpret instead of
+  failing to lower (the previous per-package ``!= "tpu"`` checks
+  interpreted on GPU unconditionally, silently de-optimizing the portable
+  kernels too).
+
+The resolution happens at trace time, so the decision is baked into the
+jit cache entry: changing the env var mid-process does not retrace
+already-compiled signatures.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def pallas_interpret(
+    override: Optional[bool] = None,
+    compiled_on: Sequence[str] = ("tpu", "gpu"),
+) -> bool:
+    """Resolve the interpret flag for a ``pallas_call``.
+
+    ``override`` (a kernel call's explicit ``interpret=`` argument) wins;
+    then the ``REPRO_PALLAS_INTERPRET`` env var; then backend detection —
+    compile iff the backend is in ``compiled_on``.
+    """
+    if override is not None:
+        return bool(override)
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    return jax.default_backend() not in compiled_on

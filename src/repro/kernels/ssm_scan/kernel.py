@@ -18,11 +18,14 @@ block_d is a multiple of 128 (VPU lanes); block_t trades VMEM footprint
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import pallas_interpret
 
 
 def _scan_kernel(a_ref, b_ref, h0_ref, o_ref, h_scratch, *, block_t: int):
@@ -56,7 +59,7 @@ def ssm_scan_kernel(
     *,
     block_t: int = 128,
     block_d: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Returns all prefix states h: (T, D)."""
     t, d = a.shape
@@ -80,6 +83,8 @@ def ssm_scan_kernel(
         out_specs=pl.BlockSpec((bt, bd), lambda dj, tj: (tj, dj)),
         out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
         scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
-        interpret=interpret,
+        # TPU-only: the scratch carry needs Mosaic VMEM AND sequential
+        # grid execution — GPU (parallel grid, Triton) must interpret.
+        interpret=pallas_interpret(interpret, compiled_on=("tpu",)),
     )(a, b, h0)
     return out[:t, :d]

@@ -8,11 +8,6 @@ import jax.numpy as jnp
 from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def ssm_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
     """a, b: (B, T, D); h0: (B, D) -> prefix states (B, T, D) f32."""
-    fn = lambda aa, bb, hh: ssm_scan_kernel(aa, bb, hh, interpret=_use_interpret())
-    return jax.vmap(fn)(a, b, h0)
+    return jax.vmap(ssm_scan_kernel)(a, b, h0)

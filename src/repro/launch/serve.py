@@ -212,12 +212,21 @@ def main():
         choices=["unreliable", "arq", "fec_arq"],
         help="report link latency under this repro.net protocol policy",
     )
+    ap.add_argument(
+        "--attn-impl", default=None,
+        choices=["naive", "blockwise", "flash_decode"],
+        help="override cfg.attn_impl — blockwise/flash_decode decode via the "
+        "length-masked flash-decode kernel (O(valid) cache blocks/step), "
+        "naive keeps the full-cache oracle",
+    )
     ap.add_argument("--full-size", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = cfg.reduced()
+    if args.attn_impl:
+        cfg = cfg.with_updates(attn_impl=args.attn_impl)
     key = jax.random.PRNGKey(0)
     params = lm.init_lm(key, cfg)
     prompts = jax.random.randint(

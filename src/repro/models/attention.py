@@ -1,19 +1,31 @@
 """Grouped-query attention with RoPE/M-RoPE, sliding windows and KV caches.
 
-Two softmax implementations:
+Softmax implementations, selected by ``cfg.attn_impl``:
 
-* ``naive``      — materializes (Sq, Skv) scores; used for smoke tests and
-                   decode (where Sq == 1 and it is just a matvec).
-* ``blockwise``  — online-softmax over KV blocks inside a scan over Q blocks
-                   (FlashAttention recurrence in pure jnp).  This is the
-                   production path for train/prefill: activation memory is
-                   O(S · block) instead of O(S²).  The Pallas kernel in
-                   ``repro/kernels/flash_attention`` implements the same
-                   recurrence with explicit VMEM tiling for TPU.
+* ``naive``        — materializes (Sq, Skv) scores; smoke tests.  At decode
+                     (Sq == 1) it masks dead cache slots before softmax and,
+                     when ``cache_index`` is a concrete int, slices the
+                     valid prefix so only live positions are dequantized.
+* ``blockwise``    — online-softmax over KV blocks inside a scan over Q
+                     blocks (FlashAttention recurrence in pure jnp) for
+                     train/prefill: activation memory is O(S · block)
+                     instead of O(S²).  The Pallas kernel in
+                     ``repro/kernels/flash_attention`` implements the same
+                     recurrence with explicit VMEM tiling for TPU.
+* ``flash_decode`` — train/prefill as ``blockwise``; the s == 1 decode step
+                     runs ``repro/kernels/decode_attention`` — length-masked
+                     online softmax that reads only ``ceil(valid/block)``
+                     cache blocks and dequantizes int8 KV inline, making the
+                     decode step O(valid tokens) instead of O(max_seq).
+                     ``blockwise`` configs also take this decode path (it is
+                     the production default the serve engines compile);
+                     ``naive`` keeps the full-cache matvec as the oracle.
 
 Sliding-window layers keep a **rotating KV cache** of ``window`` slots;
 RoPE is applied at write time so cached keys need no absolute positions at
-read time.
+read time.  Rotating writes land at ``index % C``, so the live slots are
+always the contiguous prefix ``[0, min(index + 1, C))`` — the one fact the
+length-masked decode paths rely on.
 """
 
 from __future__ import annotations
@@ -22,6 +34,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import rope as rope_lib
@@ -273,6 +286,42 @@ def _write_decode(cache: Params, k: jax.Array, v: jax.Array, index) -> Params:
     return {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
 
 
+def _concrete_index(cache_index) -> Optional[int]:
+    """``cache_index`` as a Python int when it is statically known (plain
+    int or concrete jax scalar outside jit); None for tracers."""
+    if isinstance(cache_index, (int, np.integer)):
+        return int(cache_index)
+    try:
+        return int(cache_index)
+    except (jax.errors.TracerIntegerConversionError,
+            jax.errors.ConcretizationTypeError, TypeError):
+        return None
+
+
+def _masked_decode_attn(
+    qg: jax.Array, cache: Params, cache_index, softcap: float, dtype
+) -> jax.Array:
+    """Decode (s == 1) fallback: validity-masked ``_naive_attn`` over the
+    rotating buffer.  When ``cache_index`` is concrete (e.g. the un-jitted
+    reference loop) the valid prefix is sliced out FIRST, so only live
+    positions are dequantized/read — the full-cache dequant the int8 cache
+    otherwise pays every step.  Traced indices (every jitted engine) keep
+    the fixed-shape masked form; they escape O(max_seq) via the
+    ``flash_decode`` path instead."""
+    c = cache["k"].shape[1]
+    idx = _concrete_index(cache_index)
+    if idx is not None:
+        n_valid = min(idx + 1, c)
+        cache = {name: buf[:, :n_valid] for name, buf in cache.items()}
+        valid = jnp.ones((1, n_valid), bool)
+    else:
+        n_valid = jnp.minimum(cache_index + 1, c)  # scalar
+        valid = jnp.arange(c)[None, :] < n_valid   # (1, C)
+    mask = valid[:, None, None, None, :]           # (1,1,1,1,C) -> bcast
+    k_read, v_read = _read_cache(cache, dtype)
+    return _naive_attn(qg, k_read, v_read, mask, softcap)
+
+
 def _write_prefill(cache: Params, k: jax.Array, v: jax.Array) -> Params:
     """Write a full prefill (positions 0..S-1) consistent with rotating
     decode writes: position p lands in slot p % C, keeping only the last C."""
@@ -337,15 +386,27 @@ def attention_forward(
     if cache is not None and s == 1:
         # ---- decode: write one slot, attend over the rotating buffer ----
         new_cache = _write_decode(cache, k, v, cache_index)
-        c = new_cache["k"].shape[1]
-        n_valid = jnp.minimum(cache_index + 1, c)  # scalar
-        valid = jnp.arange(c)[None, :] < n_valid   # (1, C)
-        mask = valid[:, None, None, None, :]       # (1,1,1,1,C) -> bcast
-        k_read, v_read = _read_cache(new_cache, k.dtype)
-        out = _naive_attn(qg, k_read, v_read, mask, cfg.logit_softcap)
+        if cfg.attn_impl in ("flash_decode", "blockwise"):
+            # Length-masked flash decode: O(valid) cache blocks read,
+            # int8 KV dequantized inline — the serve engines' default.
+            from repro.kernels.decode_attention import decode_attention
+
+            c = new_cache["k"].shape[1]
+            n_valid = jnp.minimum(
+                jnp.asarray(cache_index, jnp.int32) + 1, c
+            )
+            out = decode_attention(
+                qg, new_cache, n_valid,
+                softcap=cfg.logit_softcap,
+                block_kv=cfg.attn_decode_block_kv,
+            )
+        else:
+            out = _masked_decode_attn(
+                qg, new_cache, cache_index, cfg.logit_softcap, k.dtype
+            )
     else:
         # ---- train / prefill: self-attention over the fresh sequence ----
-        if cfg.attn_impl == "blockwise" and s > cfg.attn_block_q:
+        if cfg.attn_impl in ("blockwise", "flash_decode") and s > cfg.attn_block_q:
             out = _blockwise_attn(
                 qg,
                 k,

@@ -105,6 +105,44 @@ def read_slot(pool: Dict[str, Any], slot) -> Dict[str, Any]:
     return jax.tree_util.tree_map(rd, pool)
 
 
+def decode_read_bytes(
+    cfg: ModelConfig, max_seq: int, valid: int, masked: bool = True
+) -> int:
+    """Attention-cache bytes ONE decode step reads for one request.
+
+    ``masked=False`` is the legacy full-cache path: every attention layer
+    reads (and for int8, dequantizes) all ``cache_len`` K/V rows + scales.
+    ``masked=True`` is the length-masked flash-decode path: only
+    ``ceil(valid / attn_decode_block_kv)`` blocks are touched — the bytes
+    the jnp fallback actually reads (the compiled TPU kernel's portable
+    BlockSpec still delivers the full panel; see kernels/README.md).
+    Analytic — no allocation; ``benchmarks/decode_attn_bench.py`` reports
+    it next to the measured step latency.
+    """
+    import math
+
+    from repro.kernels.decode_attention import decode_block_kv
+
+    dtype = dtype_of(cfg.dtype)
+    kv_itemsize = 1 if cfg.kv_cache_dtype == "int8" else jnp.dtype(dtype).itemsize
+    hd, kvh = cfg.resolved_head_dim, cfg.num_kv_heads
+    total = 0
+    for spec in cfg.all_layers():
+        if spec.kind != "attn":
+            continue
+        length = attention.cache_len(spec, max_seq)
+        if masked:
+            bkv = decode_block_kv(length, cfg.attn_decode_block_kv)
+            rows = min(math.ceil(min(valid, length) / bkv) * bkv, length)
+        else:
+            rows = length
+        row_bytes = 2 * kvh * hd * kv_itemsize          # k + v codes
+        if cfg.kv_cache_dtype == "int8":
+            row_bytes += 2 * kvh * 2                    # bf16 scales
+        total += rows * row_bytes
+    return total
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
     """Total decode-state footprint in bytes (no allocation) — what the
     serve engine's donated-cache scan carries, reported by decode_bench."""

@@ -126,13 +126,31 @@ class Request:
 
 
 class ContinuousEngine:
-    """Slot-pooled continuous-batching engine for one model config."""
+    """Slot-pooled continuous-batching engine for one model config.
 
-    def __init__(self, cfg: ModelConfig, pool: Optional[PoolConfig] = None):
+    The fused decode step vmaps the per-token DI round over the slot axis,
+    so with ``cfg.attn_impl`` in {"blockwise", "flash_decode"} (the
+    production default) every slot runs the length-masked flash-decode
+    attention (``repro.kernels.decode_attention``) with its OWN
+    ``cache_index`` — a slot 10 tokens into a 1024-slot cache reads ~1
+    KV block instead of all 1024, and int8 caches dequantize inline.
+    ``attn_impl`` overrides the config's choice (benchmarks use it to flip
+    between the masked path and the ``"naive"`` full-cache oracle without
+    re-deriving configs).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        pool: Optional[PoolConfig] = None,
+        attn_impl: Optional[str] = None,
+    ):
         assert not cfg.frontend, (
             "frontend (VLM/audio) configs are not supported by the slot-pool "
             "engine yet — use the whole-generation DecodeEngine"
         )
+        if attn_impl is not None:
+            cfg = cfg.with_updates(attn_impl=attn_impl)
         self.cfg = cfg
         self.pool = pool or PoolConfig()
         self._padded = padding_safe(cfg, self.pool.max_bucket)

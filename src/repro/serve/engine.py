@@ -26,6 +26,12 @@ with:
 * per-entry trace / compile / call counters, so callers (benchmarks, CI)
   can assert "exactly one trace and one XLA build across N calls".
 
+The scan body's per-token DI round inherits the decode-attention dispatch
+from ``cfg.attn_impl``: "blockwise"/"flash_decode" configs (the production
+default) compile the length-masked flash-decode path
+(``repro.kernels.decode_attention`` — O(valid) cache blocks per step,
+inline int8 dequant), "naive" keeps the full-cache masked matvec oracle.
+
 The continuous-batching slot-pool engine built on the same AOT machinery
 lives in ``repro.serve.continuous``.
 """
