@@ -37,9 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.data as data
+from repro import obs
 from repro.core import comtune
 from repro.models import cnn
 from repro.optim import AdamConfig, adam_update, init_adam
+
+logger = obs.get_logger("comtune_robustness")
 
 CNN_CFG = cnn.CNNConfig(
     blocks=((1, 16), (1, 32)), fc=(32,), num_classes=10,
@@ -278,8 +281,8 @@ def main():
         row = " | ".join(
             f"{t}: ge {a['ge']:.3f} iid {a['iid']:.3f}" for t, a in cell.items()
         )
-        print(f"p={p}: {row}")
-    print(
+        logger.info(f"p={p}: {row}")
+    logger.info(
         f"trainer[{trainer['arch']} b={trainer['batch']} s={trainer['seq']} "
         f"K={trainer['steps_per_epoch']}]: "
         f"scan {trainer['scan_steps_per_s']:.0f} steps/s vs "
@@ -294,12 +297,12 @@ def main():
         for a in cell.values() for v in a.values()
     ]
     if args.assert_finite and not np.all(np.isfinite(accs)):
-        print("ASSERT FAILED: non-finite accuracy in sweep")
+        logger.error("ASSERT FAILED: non-finite accuracy in sweep")
         ok = False
     if args.assert_min_speedup is not None and (
         trainer["speedup_scan_vs_loop"] < args.assert_min_speedup
     ):
-        print(
+        logger.info(
             f"ASSERT FAILED: speedup {trainer['speedup_scan_vs_loop']:.2f} < "
             f"{args.assert_min_speedup}"
         )
@@ -307,7 +310,7 @@ def main():
     if args.assert_channel_wins:
         for p, cell in sweep["accuracy"].items():
             if cell["channel_ge"]["ge"] <= cell["dropout"]["ge"]:
-                print(
+                logger.info(
                     f"ASSERT FAILED: p={p} channel_ge {cell['channel_ge']['ge']:.3f}"
                     f" <= dropout {cell['dropout']['ge']:.3f} on matched GE eval"
                 )

@@ -36,11 +36,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHITECTURES
 from repro.kernels.decode_attention import decode_attention, decode_block_kv
 from repro.models import cache as cache_lib, lm
 from repro.models.attention import _naive_attn, _read_cache
 from repro.serve import ContinuousEngine, PoolConfig
+
+logger = obs.get_logger("decode_attn_bench")
 
 
 def _full_cache_step(q, cache, n_valid, softcap=0.0):
@@ -234,38 +237,38 @@ def main():
         json.dump(result, f, indent=2, sort_keys=True)
 
     for kv_dtype, m in micro.items():
-        print(f"[{kv_dtype} cache, max_seq={m['max_seq']}]")
+        logger.info(f"[{kv_dtype} cache, max_seq={m['max_seq']}]")
         for r in m["rows"]:
-            print(
+            logger.info(
                 f"  valid={r['valid']:>5}: full {r['old_ms']:7.3f} ms | "
                 f"masked {r['masked_ms']:7.3f} ms | {r['speedup']:5.2f}x | "
                 f"bytes {r['read_bytes_old']:>9} -> {r['read_bytes_masked']:>9}"
             )
     if "engine" in result:
         e = result["engine"]
-        print(
+        logger.info(
             f"[slot pool, int8] naive {e['naive']['tokens_per_s']:.1f} tok/s"
             f" | flash_decode {e['flash_decode']['tokens_per_s']:.1f} tok/s"
             f" | {e['speedup']:.2f}x | identical={e['outputs_identical']}"
         )
-    print(f"-> {args.out}")
+    logger.info(f"-> {args.out}")
 
     ok = True
     if args.assert_min_speedup is not None:
         gate = [r for r in micro["int8"]["rows"]
                 if r["valid"] * 8 <= args.max_seq]
         if not gate:
-            print("ASSERT FAILED: no sweep point with valid <= max_seq/8")
+            logger.error("ASSERT FAILED: no sweep point with valid <= max_seq/8")
             ok = False
         for r in gate:
             if r["speedup"] < args.assert_min_speedup:
-                print(
+                logger.info(
                     f"ASSERT FAILED: int8 valid={r['valid']} speedup "
                     f"{r['speedup']:.2f}x < {args.assert_min_speedup}x"
                 )
                 ok = False
     if "engine" in result and not result["engine"]["outputs_identical"]:
-        print("ASSERT FAILED: naive vs flash_decode engine outputs differ")
+        logger.error("ASSERT FAILED: naive vs flash_decode engine outputs differ")
         ok = False
     raise SystemExit(0 if ok else 1)
 

@@ -20,19 +20,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHITECTURES, get_config
 from repro.launch.serve import generate_reference
 from repro.models import cache as cache_lib, lm
+from repro.obs.stats import latency_summary
 from repro.serve import DecodeEngine
 
-
-def _percentiles(xs):
-    arr = np.asarray(xs, dtype=np.float64)
-    return {
-        "p50_s": float(np.percentile(arr, 50)),
-        "p99_s": float(np.percentile(arr, 99)),
-        "mean_s": float(arr.mean()),
-    }
+logger = obs.get_logger("decode_bench")
 
 
 def run_bench(
@@ -77,7 +72,7 @@ def run_bench(
         "compile_s": compile_s,
         "traces": stats["traces"],
         "calls": stats["calls"],
-        **_percentiles(call_times),
+        **latency_summary(call_times),
     }
 
     # Like-for-like with the engine: whole-call time (prefill + decode).
@@ -89,7 +84,7 @@ def run_bench(
         ref_times.append(t["prefill_s"] + t["decode_s_per_token"] * tokens)
     ref_stats = {
         "tokens_per_s": batch * tokens / float(np.median(ref_times)),
-        **_percentiles(ref_times),
+        **latency_summary(ref_times),
     }
 
     return {
@@ -107,6 +102,11 @@ def run_bench(
         "engine": eng_stats,
         "reference": ref_stats,
         "speedup": eng_stats["tokens_per_s"] / max(ref_stats["tokens_per_s"], 1e-9),
+        # With REPRO_OBS=1 the engine's registry-side metrics ride along.
+        "obs": (
+            obs.registry().histogram("decode_engine.generate_s").summary()
+            if obs.registry().enabled else None
+        ),
     }
 
 
@@ -149,7 +149,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     eng, ref = result["engine"], result["reference"]
-    print(
+    logger.info(
         f"decode_bench[{args.arch} b={args.batch} s={args.prompt_len}"
         f"+{args.tokens}]: engine {eng['tokens_per_s']:.1f} tok/s "
         f"(p50 {eng['p50_s']*1e3:.1f} ms, p99 {eng['p99_s']*1e3:.1f} ms, "
@@ -161,13 +161,13 @@ def main():
     ok = True
     if args.assert_min_tokens_per_s is not None:
         if eng["tokens_per_s"] < args.assert_min_tokens_per_s:
-            print(
+            logger.error(
                 f"ASSERT FAILED: {eng['tokens_per_s']:.2f} tok/s < "
                 f"{args.assert_min_tokens_per_s}"
             )
             ok = False
     if args.assert_single_trace and eng["traces"] != 1:
-        print(f"ASSERT FAILED: engine traced {eng['traces']} times (want 1)")
+        logger.error(f"ASSERT FAILED: engine traced {eng['traces']} times (want 1)")
         ok = False
     raise SystemExit(0 if ok else 1)
 

@@ -33,18 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCHITECTURES, get_config
 from repro.models import lm
+from repro.obs import exporters
+from repro.obs.stats import latency_summary
 from repro.serve import ContinuousEngine, DecodeEngine, PoolConfig
 
-
-def _percentiles(xs):
-    arr = np.asarray(xs, dtype=np.float64)
-    return {
-        "p50_s": float(np.percentile(arr, 50)),
-        "p99_s": float(np.percentile(arr, 99)),
-        "mean_s": float(arr.mean()),
-    }
+logger = obs.get_logger("serving_bench")
 
 
 def build_workload(
@@ -141,8 +137,11 @@ def run_bench(
         "traces": eng.traces,
         "slot_occupancy": eng.stats()["slot_occupancy"],
         "max_slots": max_slots,
-        **_percentiles(completion),
+        **latency_summary(completion),
+        "device": eng.device_counters(),
+        **{f"request_{k}": v for k, v in eng.request_stats().items()},
     }
+    eng.publish_device_counters()
 
     # ---- whole-generation baseline ----------------------------------------
     # Each request served at its exact signature, batch 1 — under the mixed
@@ -167,7 +166,7 @@ def run_bench(
         "wall_s_cold": t_cold,
         "signatures_compiled": old.num_compiled,
         "compile_s": sum(e.compile_s for e in old._compiled.values()),
-        **_percentiles(done_at),
+        **latency_summary(done_at),
     }
 
     return {
@@ -212,27 +211,53 @@ def main():
     ap.add_argument("--assert-zero-steady-compiles", action="store_true")
     ap.add_argument("--assert-min-rps", type=float, default=None)
     ap.add_argument("--assert-min-speedup", type=float, default=None)
+    ap.add_argument(
+        "--obs-dir", default=None,
+        help="enable the obs registry and write obs_events.jsonl / "
+             "obs_metrics.prom / obs_trace.json artifacts here",
+    )
+    ap.add_argument(
+        "--profile-dir", default=None,
+        help="wrap the run in jax.profiler.trace (TensorBoard dump)",
+    )
+    ap.add_argument(
+        "--assert-obs-span-chain", action="store_true",
+        help="fail unless >= 1 request has a complete submit->retire "
+             "span chain in the obs event log (implies --obs-dir)",
+    )
+    ap.add_argument(
+        "--assert-obs-drop-rate", action="store_true",
+        help="fail unless the engine's realized on-device drop rate is > 0",
+    )
     args = ap.parse_args()
+
+    if args.obs_dir or args.assert_obs_span_chain:
+        obs.enable()
+    if args.obs_dir:
+        import os
+
+        os.makedirs(args.obs_dir, exist_ok=True)
 
     kw = {}
     if args.smoke:
         kw = dict(lengths=(6, 12, 24), tokens=8, duration_s=0.5)
-    result = run_bench(
-        arch=args.arch,
-        n_clients=args.clients,
-        rate_hz=args.rate,
-        duration_s=kw.pop("duration_s", args.duration),
-        tokens=kw.pop("tokens", args.tokens),
-        max_slots=args.max_slots,
-        loss_rate=args.loss_rate,
-        channel=args.channel,
-        full_size=args.full_size,
-        **kw,
-    )
+    with exporters.jax_profile(args.profile_dir):
+        result = run_bench(
+            arch=args.arch,
+            n_clients=args.clients,
+            rate_hz=args.rate,
+            duration_s=kw.pop("duration_s", args.duration),
+            tokens=kw.pop("tokens", args.tokens),
+            max_slots=args.max_slots,
+            loss_rate=args.loss_rate,
+            channel=args.channel,
+            full_size=args.full_size,
+            **kw,
+        )
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     eng, ref = result["engine"], result["whole_generation"]
-    print(
+    logger.info(
         f"serving_bench[{result['arch']} reqs={result['n_requests']} "
         f"buckets={result['buckets']}]: engine {eng['tokens_per_s']:.1f} tok/s "
         f"({eng['requests_per_s']:.1f} req/s, occ {eng['slot_occupancy']:.2f}, "
@@ -244,25 +269,55 @@ def main():
         f"-> {args.out}"
     )
 
+    if args.obs_dir:
+        import os
+
+        os.makedirs(args.obs_dir, exist_ok=True)
+        reg = obs.registry()
+        exporters.write_jsonl(reg, os.path.join(args.obs_dir, "obs_events.jsonl"))
+        exporters.write_prometheus(
+            reg, os.path.join(args.obs_dir, "obs_metrics.prom")
+        )
+        exporters.write_chrome_trace(
+            reg, os.path.join(args.obs_dir, "obs_trace.json")
+        )
+        logger.info(f"obs artifacts -> {args.obs_dir}/")
+
     ok = True
     if args.assert_max_compiles is not None and \
             eng["compiles_total"] > args.assert_max_compiles:
-        print(f"ASSERT FAILED: {eng['compiles_total']} compiles > "
+        logger.error(f"ASSERT FAILED: {eng['compiles_total']} compiles > "
               f"{args.assert_max_compiles}")
         ok = False
     if args.assert_zero_steady_compiles and eng["compiles_steady"] != 0:
-        print(f"ASSERT FAILED: {eng['compiles_steady']} steady-state compiles")
+        logger.error(f"ASSERT FAILED: {eng['compiles_steady']} steady-state compiles")
         ok = False
     if args.assert_min_rps is not None and \
             eng["requests_per_s"] < args.assert_min_rps:
-        print(f"ASSERT FAILED: {eng['requests_per_s']:.2f} req/s < "
+        logger.error(f"ASSERT FAILED: {eng['requests_per_s']:.2f} req/s < "
               f"{args.assert_min_rps}")
         ok = False
     if args.assert_min_speedup is not None and \
             result["speedup"] < args.assert_min_speedup:
-        print(f"ASSERT FAILED: speedup {result['speedup']:.2f}x < "
+        logger.error(f"ASSERT FAILED: speedup {result['speedup']:.2f}x < "
               f"{args.assert_min_speedup}")
         ok = False
+    if args.assert_obs_span_chain:
+        chains = exporters.request_chain_rids(obs.registry())
+        if not chains:
+            logger.error("ASSERT FAILED: no complete submit->retire span chain")
+            ok = False
+        else:
+            logger.info(f"obs span chains: {len(chains)} complete requests")
+    if args.assert_obs_drop_rate:
+        rate = result["engine"]["device"]["realized_drop_rate"]
+        if not rate > 0.0:
+            logger.error(
+                f"ASSERT FAILED: realized on-device drop rate {rate} not > 0"
+            )
+            ok = False
+        else:
+            logger.info(f"realized on-device drop rate: {rate:.4f}")
     raise SystemExit(0 if ok else 1)
 
 

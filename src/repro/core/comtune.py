@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import link as link_lib
 from repro.core.link import MIN_KEEP_FRACTION
 from repro.core.compression import Compressor
+from repro.obs import device as obs_device
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,8 +153,10 @@ def dropout_link(key: jax.Array, x: jax.Array, rate) -> jax.Array:
     as the equal static rate (uniform < p), so constant traced schedules
     stay bit-identical to the static path."""
     if isinstance(rate, (int, float)) and rate <= 0.0:
+        obs_device.record_full_keep(x.size)
         return x
     keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    obs_device.record_mask(keep)
     return jnp.where(keep, x / jnp.asarray(1.0 - rate, x.dtype), 0.0)
 
 
@@ -214,6 +217,7 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
         # the shortcut.
         loss_rate = dict(spec.channel_params).get("loss_rate", spec.loss_rate)
         if isinstance(loss_rate, (int, float)) and loss_rate <= 0.0:
+            obs_device.record_full_keep(x.size)
             return x
         if spec.adaptive_compensation:
             # Beyond-paper: compensate by the realized keep fraction p̂
@@ -228,6 +232,7 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
                 )
                 mask = flat.reshape(x.shape)
             mask = jax.lax.stop_gradient(mask)
+            obs_device.record_mask(mask)
             kept = jnp.maximum(mask.mean(), MIN_KEEP_FRACTION)
             return x * mask.astype(x.dtype) / kept.astype(x.dtype)
         return link_lib.apply_channel(
@@ -241,6 +246,7 @@ def channel_link(key: jax.Array, x: jax.Array, spec: LinkSpec) -> jax.Array:
         )
     mask, p_eff = _stateful_channel_mask(key, x, spec)
     mask = jax.lax.stop_gradient(mask)
+    obs_device.record_mask(mask)
     if spec.adaptive_compensation:
         kept = jnp.maximum(mask.mean(), MIN_KEEP_FRACTION)
         return x * mask.astype(x.dtype) / kept.astype(x.dtype)
@@ -275,10 +281,26 @@ def streamed_channel_link(key: jax.Array, msg: jax.Array, spec: LinkSpec) -> jax
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
     keys = keys.at[0].set(key)
 
-    def one(k, m):  # m: (B, F) — one position's message
-        return channel_link(k, m[:, None, :], spec)[:, 0]
+    if not obs_device.tapping():
+        def one(k, m):  # m: (B, F) — one position's message
+            return channel_link(k, m[:, None, :], spec)[:, 0]
 
-    return jax.vmap(one, in_axes=(0, 1), out_axes=1)(keys, msg)
+        return jax.vmap(one, in_axes=(0, 1), out_axes=1)(keys, msg)
+
+    # Tapped variant: a collector installed OUTSIDE the vmap would leak
+    # batch tracers, so each position installs its own collector and the
+    # per-position totals come out as vmap outputs; the position-summed
+    # stats are re-published to the ambient collector.
+    def one_tapped(k, m):
+        with obs_device.tap_link_stats() as tap:
+            out = channel_link(k, m[:, None, :], spec)[:, 0]
+        return out, tap.totals()
+
+    out, stats = jax.vmap(one_tapped, in_axes=(0, 1), out_axes=(1, 0))(
+        keys, msg
+    )
+    obs_device.emit({k: jnp.sum(v) for k, v in stats.items()})
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +362,14 @@ def emulate_link(
         ):
             from repro.kernels.lossy_link import ops as ll_ops
 
+            if obs_device.tapping():
+                # The fused kernel draws its keep mask internally from the
+                # same uniforms (kernel.py: keep = u >= loss_rate, bit-exact
+                # vs the jnp reference); redraw it here purely to count.
+                u = jax.random.uniform(
+                    key, (x.size // x.shape[-1], x.shape[-1]), jnp.float32
+                )
+                obs_device.record_mask(u >= jnp.float32(spec.loss_rate))
             return ll_ops.lossy_link_egress(
                 key, x, spec.compressor.quant, spec.loss_rate
             )

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import device as obs_device
+
 # Floor for every kept-fraction denominator (1 - p, mask.mean(), 1 - p_eff)
 # so loss_rate -> 1.0 returns zeros (everything dropped) instead of
 # 0 * inf = NaN.  The single constant shared by apply_channel and all of
@@ -132,6 +134,7 @@ def apply_channel(
         mask = flat.reshape(x.shape)
     else:
         raise ValueError(f"unknown granularity: {granularity!r}")
+    obs_device.record_mask(mask)
     y = x * mask.astype(x.dtype)
     if compensate:
         keep = jnp.maximum(

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import cache as cache_lib, lm
+from repro.obs import device as obs_device
 from repro.optim import AdamConfig, AdamState, adam_update, init_adam
 from repro.sharding import rules
 from repro.sharding import ctx as shard_ctx
@@ -45,23 +46,35 @@ def make_train_step(cfg: ModelConfig, adam_cfg: AdamConfig, link_mode: str = "tr
     def train_step(params, opt_state: AdamState, batch: Dict[str, Any], key):
       with shard_ctx.use_shard_map_mesh(mesh):
         def loss_fn(p):
-            logits, _, aux = lm.forward(
-                p,
-                batch["tokens"],
-                cfg,
-                frontend_embed=batch.get("frontend_embed"),
-                link_key=key,
-                link_mode=link_mode,
-                link_spec=link_spec,
-                link_rate=batch.get("link_rate"),
-                mode="train",
-            )
+            # Tap the emulated link: what the mask actually dropped this
+            # step rides out as auxiliary metrics (constant w.r.t. p, so
+            # value_and_grad's aux carries it for free).
+            with obs_device.tap_link_stats() as tap:
+                logits, _, aux = lm.forward(
+                    p,
+                    batch["tokens"],
+                    cfg,
+                    frontend_embed=batch.get("frontend_embed"),
+                    link_key=key,
+                    link_mode=link_mode,
+                    link_spec=link_spec,
+                    link_rate=batch.get("link_rate"),
+                    mode="train",
+                )
+                link_stats = tap.totals()
             loss = lm.lm_loss(logits, batch["tokens"], aux, cfg.router_aux_coef)
-            return loss, aux
+            return loss, (aux, link_stats)
 
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        (loss, (aux, link_stats)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
         new_params, new_opt, gnorm = adam_update(grads, params, opt_state, adam_cfg)
-        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        metrics = {
+            "loss": loss, "aux": aux, "grad_norm": gnorm,
+            "link_elems": link_stats["elems"],
+            "link_dropped": link_stats["dropped"],
+            "fec_recovered_packets": link_stats["fec_recovered"],
+        }
         return new_params, new_opt, metrics
 
     return train_step
@@ -101,7 +114,11 @@ def make_train_epoch(
             params, opt_state, key = carry
             key, sub = jax.random.split(key)
             params, opt_state, metrics = step(params, opt_state, batch, sub)
-            out = {"loss": metrics["loss"], "grad_norm": metrics["grad_norm"]}
+            out = {
+                k: metrics[k]
+                for k in ("loss", "grad_norm", "link_elems", "link_dropped",
+                          "fec_recovered_packets")
+            }
             return (params, opt_state, key), out
 
         (params, opt_state, key), metrics = jax.lax.scan(
@@ -333,7 +350,9 @@ def build_sharded_step(
             ),
             out_shardings=(
                 _ns(mesh, p_spec), _ns(mesh, o_spec),
-                _ns(mesh, {"loss": rep, "aux": rep, "grad_norm": rep}),
+                _ns(mesh, {"loss": rep, "aux": rep, "grad_norm": rep,
+                           "link_elems": rep, "link_dropped": rep,
+                           "fec_recovered_packets": rep}),
             ),
             donate_argnums=(0, 1),
         )
@@ -420,7 +439,8 @@ def build_sharded_epoch(
         ),
         out_shardings=(
             _ns(mesh, p_spec), _ns(mesh, o_spec), NamedSharding(mesh, rep),
-            _ns(mesh, {"loss": rep, "grad_norm": rep}),
+            _ns(mesh, {"loss": rep, "grad_norm": rep, "link_elems": rep,
+                       "link_dropped": rep, "fec_recovered_packets": rep}),
         ),
         donate_argnums=(0, 1),
     )

@@ -30,6 +30,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 from typing import Optional, Tuple
@@ -42,6 +43,7 @@ from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import ARCHITECTURES, get_config
 from repro.configs.base import ShapeConfig
 from repro.data import lm_batch_iterator, make_lm_dataset
+from repro import obs
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (
     build_sharded_epoch,
@@ -51,6 +53,11 @@ from repro.launch.steps import (
 )
 from repro.models import lm
 from repro.optim import AdamConfig, init_adam, schedule
+
+logger = obs.get_logger("train")
+
+# Per-step link stats the train step/epoch metrics now carry (launch.steps).
+_LINK_KEYS = ("link_elems", "link_dropped", "fec_recovered_packets")
 
 
 def build_train_link_spec(
@@ -155,6 +162,7 @@ def train(
     fsdp: str = "off",
     ckpt_every: int = 0,
     resume: bool = False,
+    profile_dir: Optional[str] = None,
 ):
     """Returns (params, losses, cfg); ``losses`` covers the steps run by
     THIS call (so a resumed run returns the tail of the trajectory)."""
@@ -191,7 +199,7 @@ def train(
             # is static); default to ~5 rather than pinning at p0.
             steps_per_epoch = min(steps_per_epoch, max(1, -(-steps // 5)))
     elif curriculum is not None and not per_step and steps_per_epoch >= steps > 1:
-        print(
+        logger.warning(
             "warning: --curriculum with a single epoch chunk "
             f"(--steps-per-epoch {steps_per_epoch} >= --steps {steps}) "
             "trains entirely at the start rate"
@@ -204,7 +212,7 @@ def train(
         if not supports_target_rate(
             link_spec.channel or "iid", link_spec.channel_params
         ):
-            print(
+            logger.warning(
                 f"warning: --curriculum/--train-loss-rate have no effect on "
                 f"the {link_spec.channel!r} channel (its loss rate comes "
                 f"from its own physics/trace, not loss_rate)"
@@ -212,7 +220,7 @@ def train(
             # Don't compile one epoch program per (identical) ramped rate.
             curriculum = None
     elif train_loss_rate is not None and link_spec.train_link != "channel":
-        print(
+        logger.warning(
             "warning: --train-loss-rate only affects --train-link channel; "
             "the dropout emulation draws at the dropout rate "
             f"({link_spec.dropout_rate})"
@@ -227,7 +235,7 @@ def train(
         )
         params, opt_state = restored["params"], restored["opt_state"]
         key = restored["key"]
-        print(f"resumed from {ckpt_dir} at step {start_step}")
+        logger.info(f"resumed from {ckpt_dir} at step {start_step}")
 
     tokens = make_lm_dataset(cfg.vocab_size, n_tokens=max(100_000, batch * seq * 50))
     it = lm_batch_iterator(tokens, batch, seq, seed=seed)
@@ -290,7 +298,7 @@ def train(
         # defeated async dispatch).
         jax.block_until_ready((params, opt_state))
         last = float(np.asarray(losses[-1]).reshape(-1)[-1])
-        print(
+        logger.info(
             f"step {step_global:5d} loss {last:.4f} "
             f"({(time.time()-t0)/max(done, 1):.2f}s/step)"
         )
@@ -312,53 +320,82 @@ def train(
         curriculum_rates(steps, curriculum) if per_step else None
     )
     chunks = curriculum_schedule(steps, steps_per_epoch, curriculum)
-    for chunk_start, n_steps, rate in chunks:
-        if chunk_start + n_steps <= start_step:
-            continue  # fully covered by the restored checkpoint
-        if epoch_scan and chunk_start >= start_step:
-            stack = np.stack([next(it) for _ in range(n_steps)])
-            batches = {"tokens": jnp.asarray(stack)}
-            if fe is not None:
-                batches["frontend_embed"] = jnp.broadcast_to(
-                    fe, (n_steps,) + fe.shape
-                )
-            if per_step:
-                # Traced per-step ramp: the rate is scan data, the epoch
-                # program is shared across every chunk of this shape.
-                batches["link_rate"] = jnp.asarray(
-                    rates_global[chunk_start : chunk_start + n_steps]
-                )
-                rate = None
-            epoch_fn = get_epoch_fn(rate, n_steps)
-            params, opt_state, key, metrics = epoch_fn(
-                params, opt_state, batches, key
-            )
-            losses.append(metrics["loss"])
-            done += n_steps
-            step_global = chunk_start + n_steps
-            if step_global % log_every < n_steps or step_global == steps:
-                log(step_global)
-            maybe_ckpt(step_global, grid=n_steps)
-        else:
-            # Per-step path: the scan oracle/baseline, and how a resume
-            # that lands mid-chunk re-aligns to the chunk grid.
-            step_fn = get_step_fn(None if per_step else rate)
-            for i in range(n_steps):
-                step_global = chunk_start + i + 1
-                if step_global <= start_step:
-                    continue
-                b = {"tokens": jnp.asarray(next(it))}
-                if fe is not None:
-                    b["frontend_embed"] = fe
-                if per_step:
-                    b["link_rate"] = jnp.asarray(rates_global[step_global - 1])
-                key, sub = jax.random.split(key)
-                params, opt_state, metrics = step_fn(params, opt_state, b, sub)
-                losses.append(metrics["loss"])
-                done += 1
-                if step_global % log_every == 0 or step_global == steps:
-                    log(step_global)
-                maybe_ckpt(step_global)
+    # Observability: the registry span / profiler wrap dispatch only (no
+    # extra host syncs); link-stat device scalars are buffered like the
+    # losses and summed once after the loop.
+    reg = obs.registry()
+    link_dev: list = []
+    _obs_ctx = contextlib.ExitStack()
+    _obs_ctx.enter_context(obs.exporters.jax_profile(profile_dir))
+    _obs_ctx.enter_context(
+        reg.span("train.run", arch=arch, steps=steps, sharded=sharded)
+    )
+    try:
+      for chunk_start, n_steps, rate in chunks:
+          if chunk_start + n_steps <= start_step:
+              continue  # fully covered by the restored checkpoint
+          if epoch_scan and chunk_start >= start_step:
+              stack = np.stack([next(it) for _ in range(n_steps)])
+              batches = {"tokens": jnp.asarray(stack)}
+              if fe is not None:
+                  batches["frontend_embed"] = jnp.broadcast_to(
+                      fe, (n_steps,) + fe.shape
+                  )
+              if per_step:
+                  # Traced per-step ramp: the rate is scan data, the epoch
+                  # program is shared across every chunk of this shape.
+                  batches["link_rate"] = jnp.asarray(
+                      rates_global[chunk_start : chunk_start + n_steps]
+                  )
+                  rate = None
+              epoch_fn = get_epoch_fn(rate, n_steps)
+              with reg.span("train.epoch", start=chunk_start, steps=n_steps):
+                  params, opt_state, key, metrics = epoch_fn(
+                      params, opt_state, batches, key
+                  )
+              losses.append(metrics["loss"])
+              link_dev.append({k: metrics[k] for k in _LINK_KEYS})
+              done += n_steps
+              step_global = chunk_start + n_steps
+              if step_global % log_every < n_steps or step_global == steps:
+                  log(step_global)
+              maybe_ckpt(step_global, grid=n_steps)
+          else:
+              # Per-step path: the scan oracle/baseline, and how a resume
+              # that lands mid-chunk re-aligns to the chunk grid.
+              step_fn = get_step_fn(None if per_step else rate)
+              for i in range(n_steps):
+                  step_global = chunk_start + i + 1
+                  if step_global <= start_step:
+                      continue
+                  b = {"tokens": jnp.asarray(next(it))}
+                  if fe is not None:
+                      b["frontend_embed"] = fe
+                  if per_step:
+                      b["link_rate"] = jnp.asarray(rates_global[step_global - 1])
+                  key, sub = jax.random.split(key)
+                  params, opt_state, metrics = step_fn(params, opt_state, b, sub)
+                  losses.append(metrics["loss"])
+                  link_dev.append({k: metrics[k] for k in _LINK_KEYS})
+                  done += 1
+                  if step_global % log_every == 0 or step_global == steps:
+                      log(step_global)
+                  maybe_ckpt(step_global)
+
+    finally:
+        _obs_ctx.close()
+
+    if reg.enabled and link_dev:
+        tot = {
+            k: float(sum(float(np.asarray(d[k], np.float64).sum())
+                         for d in link_dev))
+            for k in _LINK_KEYS
+        }
+        for k, v in tot.items():
+            reg.counter(f"train.{k}").inc(v)
+        reg.gauge("train.realized_drop_rate").set(
+            tot["link_dropped"] / max(tot["link_elems"], 1.0)
+        )
 
     if ckpt_dir and not ckpt_every:
         save_checkpoint(
@@ -366,7 +403,7 @@ def train(
             {"params": params, "opt_state": opt_state, "key": key},
             name="train",
         )
-        print(f"saved checkpoint to {ckpt_dir}")
+        logger.info(f"saved checkpoint to {ckpt_dir}")
     flat = np.concatenate([np.asarray(l).reshape(-1) for l in losses]) \
         if losses else np.zeros(0)
     return params, list(map(float, flat)), cfg
@@ -444,6 +481,11 @@ def main():
         "--resume", action="store_true",
         help="restore the latest checkpoint in --ckpt-dir and continue",
     )
+    ap.add_argument(
+        "--profile-dir", default=None,
+        help="wrap the run in jax.profiler.trace writing to this directory "
+             "(view with TensorBoard or ui.perfetto.dev)",
+    )
     args = ap.parse_args()
     _, losses, _ = train(
         args.arch,
@@ -466,9 +508,10 @@ def main():
         fsdp=args.fsdp,
         ckpt_every=args.ckpt_every,
         resume=args.resume,
+        profile_dir=args.profile_dir,
     )
     if losses:
-        print(
+        logger.info(
             f"final loss {np.mean(losses[-10:]):.4f} "
             f"(start {np.mean(losses[:5]):.4f})"
         )

@@ -143,6 +143,40 @@ def decode_read_bytes(
     return total
 
 
+def decode_read_bytes_jnp(
+    cfg: ModelConfig, max_seq: int, valid, masked: bool = True
+):
+    """Traced twin of :func:`decode_read_bytes`: ``valid`` may be a traced
+    scalar or vector (the slot pool's per-slot lengths), so the slot-pool
+    engine can accumulate the per-step read-bytes device counter inside
+    the fused decode program.  Agrees exactly with the int analytic for
+    every concrete ``valid`` (tested) — the per-layer cache lengths and
+    effective block sizes are static, only the ceil-to-block arithmetic
+    runs on device."""
+    from repro.kernels.decode_attention import decode_block_kv
+
+    dtype = dtype_of(cfg.dtype)
+    kv_itemsize = 1 if cfg.kv_cache_dtype == "int8" else jnp.dtype(dtype).itemsize
+    hd, kvh = cfg.resolved_head_dim, cfg.num_kv_heads
+    valid = jnp.asarray(valid, jnp.float32)
+    total = jnp.zeros_like(valid)
+    for spec in cfg.all_layers():
+        if spec.kind != "attn":
+            continue
+        length = attention.cache_len(spec, max_seq)
+        row_bytes = 2 * kvh * hd * kv_itemsize
+        if cfg.kv_cache_dtype == "int8":
+            row_bytes += 2 * kvh * 2
+        if masked:
+            bkv = decode_block_kv(length, cfg.attn_decode_block_kv)
+            v = jnp.minimum(valid, float(length))
+            rows = jnp.minimum(jnp.ceil(v / bkv) * bkv, float(length))
+        else:
+            rows = jnp.full_like(valid, float(length))
+        total = total + rows * float(row_bytes)
+    return total
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
     """Total decode-state footprint in bytes (no allocation) — what the
     serve engine's donated-cache scan carries, reported by decode_bench."""

@@ -264,11 +264,18 @@ def fec_element_keep_jnp(
     channel produced the packet draw."""
     from repro.net.channels import element_mask_from_packets
 
+    from repro.obs import device as obs_device
+
     kperm, kmask = jax.random.split(key)
     n_data = -(-num_elements // elements_per_packet)
     n_tx = spec.transmitted_packets(n_data)
     raw = channel.packet_keep_jnp(kmask, n_tx)
     data_keep = block_recovery_mask(raw, spec)[:n_data]
+    if obs_device.tapping():
+        # Data packets the raw channel lost but decoding reconstructed.
+        raw_data = raw.reshape(-1, spec.block_packets)[:, : spec.k]
+        raw_data = raw_data.reshape(-1)[:n_data].astype(jnp.float32)
+        obs_device.record_fec_recovered(jnp.sum(data_keep - raw_data))
     return jax.lax.stop_gradient(element_mask_from_packets(
         data_keep, num_elements, elements_per_packet, kperm, shuffle
     ))

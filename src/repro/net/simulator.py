@@ -44,11 +44,14 @@ import collections
 import dataclasses
 import heapq
 import itertools
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import link as link_lib
+from repro.obs.stats import latency_summary
 from repro.net.channels import Channel, IIDChannel
 from repro.net.protocol import UnreliableProtocol, _ProtocolBase
 
@@ -71,6 +74,7 @@ class _Request:
     rid: int
     client: int
     t_arrival: float
+    t_uplink_start: float = 0.0
     t_uplink_done: float = 0.0
     delivered_fraction: float = 0.0
     t_done: float = 0.0
@@ -139,6 +143,7 @@ def run_sim(
     p50/p99 include what the hardware actually did.  Composes with
     ``model_in_the_loop=True`` (mask collection is unchanged).
     """
+    t_wall0 = time.perf_counter()
     rng = np.random.RandomState(cfg.seed)
     channel_cfg = channel_cfg or link_lib.ChannelConfig()
     protocol = protocol or UnreliableProtocol()
@@ -216,6 +221,7 @@ def run_sim(
             c = payload
             req = client_pending[c].popleft()
             client_busy[c] = True
+            req.t_uplink_start = now
             result, ch_state[c] = protocol.run_round(
                 rng, channels[c], ch_state[c], cfg.n_packets
             )
@@ -263,9 +269,8 @@ def run_sim(
     if done:
         lat = np.array([r.t_done - r.t_arrival for r in done])
         frac = np.array([r.delivered_fraction for r in done])
-        p50 = float(np.percentile(lat, 50))
-        p99 = float(np.percentile(lat, 99))
-        mean = float(lat.mean())
+        summ = latency_summary(lat)              # shared obs.stats helper
+        p50, p99, mean = summ["p50_s"], summ["p99_s"], summ["mean_s"]
         mfrac = float(frac.mean())
         if model_in_the_loop:
             acc = _model_in_the_loop_accuracy(
@@ -277,7 +282,7 @@ def run_sim(
             acc_mode = "curve"
     else:
         p50 = p99 = mean = mfrac = 0.0
-    return SimReport(
+    report = SimReport(
         arrived=arrived,
         served=served,
         dropped=dropped,
@@ -291,6 +296,53 @@ def run_sim(
         accuracy_under_load=acc,
         accuracy_mode=acc_mode,
     )
+    reg = obs.registry()
+    if reg.enabled:
+        _publish_obs(reg, report, done, t_wall0)
+    return report
+
+
+# How many per-request simulated-time spans go into the event log (the
+# counters/histograms always cover every request).
+_OBS_SPAN_CAP = 1024
+
+
+def _publish_obs(reg, report: SimReport, done: Sequence[_Request],
+                 t_wall0: float) -> None:
+    """Registry export of one simulation.  Per-request spans are recorded
+    on the *simulated* clock, rebased onto the registry's epoch
+    (``reg.perf0 + sim_time``) so a chrome trace of the event log shows the
+    sim timeline starting at 0 — wall time only stamps the ``sim.run``
+    span itself."""
+    reg.record_span(
+        "sim.run", t_wall0, time.perf_counter(),
+        arrived=report.arrived, served=report.served,
+        dropped=report.dropped, throughput_rps=report.throughput_rps,
+    )
+    reg.counter("sim.requests_arrived").inc(report.arrived)
+    reg.counter("sim.requests_served").inc(report.served)
+    reg.counter("sim.requests_dropped").inc(report.dropped)
+    reg.gauge("sim.throughput_rps").set(report.throughput_rps)
+    reg.gauge("sim.mean_batch_size").set(report.mean_batch_size)
+    lat_h = reg.histogram("sim.latency_s")
+    frac_h = reg.histogram("sim.delivered_fraction")
+    for r in done:
+        lat_h.observe(r.t_done - r.t_arrival)
+        frac_h.observe(r.delivered_fraction)
+    for r in done[:_OBS_SPAN_CAP]:
+        parent = reg.record_span(
+            "sim.request", reg.perf0 + r.t_arrival, reg.perf0 + r.t_done,
+            rid=r.rid, client=r.client,
+            delivered_fraction=r.delivered_fraction,
+        )
+        reg.record_span(
+            "sim.uplink", reg.perf0 + r.t_uplink_start,
+            reg.perf0 + r.t_uplink_done, parent=parent, rid=r.rid,
+        )
+        reg.record_span(
+            "sim.server", reg.perf0 + r.t_uplink_done,
+            reg.perf0 + r.t_done, parent=parent, rid=r.rid,
+        )
 
 
 _EVAL_CHUNK = 256   # requests per model call when flushing collected masks

@@ -1,0 +1,157 @@
+"""On-device link/decode counters: trace-time taps + the counter pytree.
+
+The link layers (``core.link.apply_channel``, ``core.comtune``'s
+dropout/channel/streamed paths, ``net.fec``) cannot host-log what they did
+— they run inside jit-compiled programs.  Instead they *tap*: whenever a
+collector is installed on the module-level stack, each mask draw records
+its traced element count / dropped count / FEC recoveries into the
+collector, and the caller that installed it turns the totals into extra
+program **outputs** (the ``obs.DeviceCounters`` pytree carried by the
+slot-pool engine state) or auxiliary metrics (the train step).  Host code
+reads them only at existing sync points.
+
+Two invariants this design exists to protect:
+
+* **No program forking on obs state.**  Whether the host registry is
+  enabled or disabled never changes what gets traced — the engine installs
+  its taps unconditionally, so obs on/off compiles byte-identical programs
+  and ``compiles == num_buckets + 1`` holds either way.  With no collector
+  installed (reference loops, the whole-generation engine, training without
+  the tap) the record calls are dead ``if not _STACK`` branches and the
+  traced program is exactly the pre-obs program.
+* **vmap safety.**  A tap installed *outside* a ``jax.vmap`` would leak
+  batch tracers when read.  Callers that vmap over link draws
+  (``streamed_channel_link``, the slot-pool decode step) install an inner
+  collector inside the vmapped function and return the totals as vmap
+  outputs; ``emit`` re-publishes the (now properly batched) sums to the
+  ambient collector.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+# Collector stack.  Tracing is single-threaded per program build; the
+# stack is module-level and LIFO so nested taps (engine step installing a
+# tap around a forward that streams positions) compose.
+_STACK: List["LinkTap"] = []
+
+# The counter pytree's float leaves.  "decode_steps" is int32; everything
+# else float32 (counts can exceed int32 over long runs, and the link
+# totals are already float masks summed on device).
+COUNTER_KEYS = (
+    "decode_steps",
+    "valid_tokens",
+    "decode_read_bytes",
+    "link_elems",
+    "link_dropped",
+    "fec_recovered_packets",
+)
+
+
+class LinkTap:
+    """One collector frame: accumulates traced link statistics."""
+
+    __slots__ = ("elems", "dropped", "fec_recovered")
+
+    def __init__(self) -> None:
+        self.elems: list = []
+        self.dropped: list = []
+        self.fec_recovered: list = []
+
+    def totals(self) -> Dict[str, jax.Array]:
+        """Summed stats as float32 scalars (zeros when nothing was drawn,
+        e.g. ``link_mode="off"`` — still valid pytree leaves)."""
+        z = jnp.float32(0.0)
+        return {
+            "elems": sum(self.elems, z),
+            "dropped": sum(self.dropped, z),
+            "fec_recovered": sum(self.fec_recovered, z),
+        }
+
+
+def tapping() -> bool:
+    """True while a collector is installed (decides, at TRACE time,
+    whether the extra counting ops exist in the program at all)."""
+    return bool(_STACK)
+
+
+@contextlib.contextmanager
+def tap_link_stats():
+    """Install a collector for the duration of the block; every link mask
+    drawn inside (by this trace) records into it.  Read ``tap.totals()``
+    *inside* the same traced scope."""
+    tap = LinkTap()
+    _STACK.append(tap)
+    try:
+        yield tap
+    finally:
+        popped = _STACK.pop()
+        assert popped is tap, "unbalanced obs.device collector stack"
+
+
+def record_mask(mask: jax.Array) -> None:
+    """Record one keep-mask draw (0/1, any shape): total elements and the
+    dropped (zero) count.  No-op without a collector."""
+    if not _STACK:
+        return
+    m = mask.astype(jnp.float32)
+    tap = _STACK[-1]
+    tap.elems.append(jnp.float32(m.size))
+    tap.dropped.append(jnp.float32(m.size) - jnp.sum(m))
+
+
+def record_full_keep(num_elements: int) -> None:
+    """Record a static zero-loss shortcut (mask of all ones, never drawn)."""
+    if not _STACK:
+        return
+    _STACK[-1].elems.append(jnp.float32(num_elements))
+
+
+def record_fec_recovered(n_packets: jax.Array) -> None:
+    """Record data packets recovered by FEC decoding (lost on the raw
+    channel, reconstructed from parity)."""
+    if not _STACK:
+        return
+    _STACK[-1].fec_recovered.append(jnp.asarray(n_packets, jnp.float32))
+
+
+def emit(totals: Dict[str, jax.Array]) -> None:
+    """Re-publish summed stats (a ``LinkTap.totals()`` dict, e.g. brought
+    out of a vmap as program outputs and reduced) to the ambient
+    collector."""
+    if not _STACK:
+        return
+    tap = _STACK[-1]
+    tap.elems.append(jnp.asarray(totals["elems"], jnp.float32))
+    tap.dropped.append(jnp.asarray(totals["dropped"], jnp.float32))
+    tap.fec_recovered.append(jnp.asarray(totals["fec_recovered"], jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# DeviceCounters: the pytree threaded through the jitted hot paths
+# ---------------------------------------------------------------------------
+
+def counter_zeros() -> Dict[str, jax.Array]:
+    """Fresh ``obs.DeviceCounters`` pytree (all zeros)."""
+    out: Dict[str, jax.Array] = {}
+    for k in COUNTER_KEYS:
+        dt = jnp.int32 if k == "decode_steps" else jnp.float32
+        out[k] = jnp.zeros((), dt)
+    return out
+
+
+def counters_to_host(counters) -> Dict[str, float]:
+    """Device pytree -> plain floats plus the derived realized drop rate
+    (one sync; call only at existing sync points)."""
+    import numpy as np
+
+    host = {k: float(np.asarray(v)) for k, v in counters.items()}
+    host["realized_drop_rate"] = host["link_dropped"] / max(
+        host["link_elems"], 1.0
+    )
+    return host

@@ -1,0 +1,36 @@
+"""Logging setup honoring ``REPRO_LOG_LEVEL``.
+
+``get_logger("train")`` returns a ``repro.train`` logger writing bare
+messages to stdout (no timestamp/level prefix — at the default INFO level
+the output is byte-identical to the ``print`` calls it replaced in
+``launch/train.py`` and ``benchmarks/*``).  Set ``REPRO_LOG_LEVEL=DEBUG``
+or ``WARNING`` to widen/silence."""
+
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_ROOT = "repro"
+_CONFIGURED = False
+
+
+def _configure() -> None:
+    global _CONFIGURED
+    if _CONFIGURED:
+        return
+    _CONFIGURED = True
+    root = logging.getLogger(_ROOT)
+    level = os.environ.get("REPRO_LOG_LEVEL", "INFO").upper()
+    root.setLevel(getattr(logging, level, logging.INFO))
+    if not root.handlers:
+        h = logging.StreamHandler(sys.stdout)
+        h.setFormatter(logging.Formatter("%(message)s"))
+        root.addHandler(h)
+    root.propagate = False
+
+
+def get_logger(name: str = "") -> logging.Logger:
+    _configure()
+    return logging.getLogger(f"{_ROOT}.{name}" if name else _ROOT)

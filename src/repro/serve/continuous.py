@@ -60,9 +60,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.launch.steps import make_serve_step
 from repro.models import cache as cache_lib, lm
+from repro.obs import device as obs_device
 from repro.serve.engine import abstract_like
 
 
@@ -116,13 +118,33 @@ class Request:
     max_tokens: int
     key: jax.Array                # (2,) uint32 — the per-request RNG chain
     tokens: Optional[np.ndarray] = None   # (max_tokens,) int32 when done
-    t_submit: float = 0.0
-    t_admit: float = 0.0
-    t_done: float = 0.0
+    bucket: int = 0               # prefill bucket this request was padded to
+    t_submit: float = 0.0         # queued
+    t_admit: float = 0.0          # scheduler picked a slot (before prefill)
+    t_first_token: float = 0.0    # prefill produced the first token
+    t_done: float = 0.0           # last decode round completed
+    t_retire: float = 0.0         # output harvested to host
 
     @property
     def done(self) -> bool:
         return self.tokens is not None
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, from submission (includes queue wait).
+        Honest — blocked on device — only with the obs registry enabled;
+        otherwise it is a dispatch-time stamp (a lower bound)."""
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean time per output token over the decode tail (first token
+        excluded: it comes from the prefill program)."""
+        return (self.t_done - self.t_first_token) / max(1, self.max_tokens - 1)
+
+    @property
+    def e2e_s(self) -> float:
+        return self.t_done - self.t_submit
 
 
 class ContinuousEngine:
@@ -166,6 +188,7 @@ class ContinuousEngine:
         self._free: List[int] = list(range(self.pool.max_slots))
         self._pending_harvest: List[Tuple[int, Request]] = []
         self._finished: List[Request] = []
+        self._req_metrics: collections.deque = collections.deque(maxlen=4096)
         self._rid = 0
         # Counters / stats.
         self.compiles = 0
@@ -201,31 +224,49 @@ class ContinuousEngine:
             "n_gen": jnp.zeros((p.max_slots,), jnp.int32),
             "budget": jnp.zeros((p.max_slots,), jnp.int32),
             "out": jnp.zeros((p.max_slots, p.max_new), jnp.int32),
+            # On-device telemetry (obs.DeviceCounters): carried and
+            # accumulated UNCONDITIONALLY — whether the host registry is
+            # enabled only decides whether anyone reads it, so obs on/off
+            # traces byte-identical programs and the compile-count
+            # invariant is independent of observability.
+            "obs": obs_device.counter_zeros(),
         }
 
     def _make_decode_step(self):
         cfg, pool = self.cfg, self.pool
         step = make_serve_step(cfg)
+        masked_attn = cfg.attn_impl != "naive"
 
         def pool_step(params, state):
             def one(token, cache, length, key, n_gen, budget, out_row):
                 # Mirrors one iteration of the reference per-token loop at
                 # batch 1: emit the carried token, split the slot's key,
-                # run the DI round, select the next token.
+                # run the DI round, select the next token.  The link tap
+                # is installed INSIDE the vmapped body (an outer collector
+                # would leak batch tracers); the per-slot totals ride out
+                # as vmap outputs.
                 live = n_gen < budget
-                if pool.greedy:
-                    key2, sub = jax.random.split(key)
-                    logits, new_cache = step(params, token, cache, length, sub)
-                    nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-                else:
-                    key2, sub, ks = jax.random.split(key, 3)
-                    logits, new_cache = step(params, token, cache, length, sub)
-                    scaled = logits.astype(jnp.float32) / jnp.float32(
-                        max(pool.temperature, 1e-6)
-                    )
-                    nxt = jax.random.categorical(ks, scaled, axis=-1)[
-                        :, None
-                    ].astype(jnp.int32)
+                with obs_device.tap_link_stats() as tap:
+                    if pool.greedy:
+                        key2, sub = jax.random.split(key)
+                        logits, new_cache = step(
+                            params, token, cache, length, sub
+                        )
+                        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(
+                            jnp.int32
+                        )
+                    else:
+                        key2, sub, ks = jax.random.split(key, 3)
+                        logits, new_cache = step(
+                            params, token, cache, length, sub
+                        )
+                        scaled = logits.astype(jnp.float32) / jnp.float32(
+                            max(pool.temperature, 1e-6)
+                        )
+                        nxt = jax.random.categorical(ks, scaled, axis=-1)[
+                            :, None
+                        ].astype(jnp.int32)
+                    link = tap.totals()
                 out2 = jax.lax.dynamic_update_slice(out_row, token[0], (n_gen,))
                 sel = lambda a, b: jnp.where(live, a, b)
                 # NOTE: new_cache is NOT select-masked — a retired slot's
@@ -240,16 +281,37 @@ class ContinuousEngine:
                     sel(key2, key),
                     sel(n_gen + 1, n_gen),
                     sel(out2, out_row),
+                    link,
                 )
 
-            token, cache, length, key, n_gen, out = jax.vmap(one)(
+            token, cache, length, key, n_gen, out, link = jax.vmap(one)(
                 state["token"], state["cache"], state["length"],
                 state["key"], state["n_gen"], state["budget"], state["out"],
             )
+            # Device counters: only LIVE slots count (retired slots keep
+            # stepping, but their rounds belong to no request — exactly
+            # the rounds a per-request reference run never performs).
+            livef = (state["n_gen"] < state["budget"]).astype(jnp.float32)
+            valid = (state["length"] + 1).astype(jnp.float32)
+            read_b = cache_lib.decode_read_bytes_jnp(
+                cfg, pool.max_seq, valid, masked=masked_attn
+            )
+            c = state["obs"]
+            new_obs = {
+                "decode_steps": c["decode_steps"] + jnp.int32(1),
+                "valid_tokens": c["valid_tokens"] + jnp.sum(livef * valid),
+                "decode_read_bytes": c["decode_read_bytes"]
+                + jnp.sum(livef * read_b),
+                "link_elems": c["link_elems"] + jnp.sum(livef * link["elems"]),
+                "link_dropped": c["link_dropped"]
+                + jnp.sum(livef * link["dropped"]),
+                "fec_recovered_packets": c["fec_recovered_packets"]
+                + jnp.sum(livef * link["fec_recovered"]),
+            }
             return {
                 "cache": cache, "token": token, "length": length,
                 "key": key, "n_gen": n_gen, "budget": state["budget"],
-                "out": out,
+                "out": out, "obs": new_obs,
             }
 
         return pool_step
@@ -261,11 +323,18 @@ class ContinuousEngine:
             # Reference chain: key, sub = split(request_key); prefill(sub).
             key, sub = jax.random.split(rkey)
             fresh = cache_lib.init_cache(cfg, 1, pool.max_seq)
-            logits, filled, _ = lm.forward(
-                params, prompt, cfg,
-                cache=fresh, cache_index=0,
-                link_key=sub, link_mode="serve", mode="prefill",
-            )
+            # Link counters for the streamed prompt upload.  NOTE: the
+            # streamed link runs over the PADDED bucket, so these totals
+            # include the padded positions' draws (they are real rounds of
+            # the compiled program; the oracle test replicates the
+            # padding).
+            with obs_device.tap_link_stats() as tap:
+                logits, filled, _ = lm.forward(
+                    params, prompt, cfg,
+                    cache=fresh, cache_index=0,
+                    link_key=sub, link_mode="serve", mode="prefill",
+                )
+                link = tap.totals()
             last = jax.lax.dynamic_slice(
                 logits, (0, true_len - 1, 0), (1, 1, logits.shape[-1])
             )[:, 0]                                   # (1, V): true last pos
@@ -280,7 +349,16 @@ class ContinuousEngine:
                     :, None
                 ].astype(jnp.int32)
             set1 = lambda arr, v: arr.at[slot].set(v)
+            c = state["obs"]
+            new_obs = {
+                **c,
+                "link_elems": c["link_elems"] + link["elems"],
+                "link_dropped": c["link_dropped"] + link["dropped"],
+                "fec_recovered_packets": c["fec_recovered_packets"]
+                + link["fec_recovered"],
+            }
             return {
+                "obs": new_obs,
                 "cache": cache_lib.write_slot(state["cache"], filled, slot),
                 "token": jax.lax.dynamic_update_slice(
                     state["token"], tok0[None], (slot, 0, 0)
@@ -354,15 +432,56 @@ class ContinuousEngine:
         )
         self._rid += 1
         self._queue.append(req)
+        obs.registry().counter("serve.requests_submitted").inc()
         return req
 
     def _harvest(self) -> None:
         if not self._pending_harvest:
             return
         out = np.asarray(self._state["out"])    # one sync for the batch
+        now = time.perf_counter()
+        reg = obs.registry()
         for slot, req in self._pending_harvest:
             req.tokens = out[slot, : req.max_tokens].copy()
+            req.t_retire = now
+            self._req_metrics.append(
+                {"ttft_s": req.ttft_s, "tpot_s": req.tpot_s,
+                 "e2e_s": req.e2e_s}
+            )
+            if reg.enabled:
+                self._emit_request_spans(reg, req, slot)
         self._pending_harvest.clear()
+
+    def _emit_request_spans(self, reg, req: Request, slot: int) -> None:
+        """The submit→retire span chain, reconstructed from the stamps
+        taken at sync points (one parent span + the four lifecycle
+        phases), plus the TTFT/TPOT/e2e histograms."""
+        parent = reg.record_span(
+            "request", req.t_submit, req.t_retire, rid=req.rid, slot=slot,
+            bucket=req.bucket, prompt_len=int(req.prompt.size),
+            max_tokens=req.max_tokens, ttft_s=req.ttft_s, tpot_s=req.tpot_s,
+        )
+        reg.record_span(
+            "request/queue", req.t_submit, req.t_admit,
+            parent=parent, rid=req.rid,
+        )
+        reg.record_span(
+            "request/prefill", req.t_admit, req.t_first_token,
+            parent=parent, rid=req.rid, bucket=req.bucket,
+        )
+        reg.record_span(
+            "request/decode", req.t_first_token, req.t_done,
+            parent=parent, rid=req.rid, tokens=req.max_tokens,
+        )
+        reg.record_span(
+            "request/retire", req.t_done, req.t_retire,
+            parent=parent, rid=req.rid,
+        )
+        reg.histogram("serve.ttft_s").observe(req.ttft_s)
+        reg.histogram("serve.tpot_s").observe(req.tpot_s)
+        reg.histogram("serve.e2e_s").observe(req.e2e_s)
+        reg.counter("serve.requests_retired").inc()
+        reg.counter("serve.tokens_generated").inc(req.max_tokens)
 
     def _admit(self, params) -> None:
         while self._queue and self._free:
@@ -376,6 +495,12 @@ class ContinuousEngine:
             fn = self._prefill_for(params, bucket)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, : req.prompt.size] = req.prompt
+            req.bucket = bucket
+            # Admission is the scheduling decision, so stamp it BEFORE the
+            # prefill dispatch — the old after-dispatch stamp folded the
+            # prefill into the "queue wait" phase and made TTFT's prefill
+            # component unmeasurable.
+            req.t_admit = time.perf_counter()
             self._state = fn(
                 params, self._state, jnp.asarray(padded),
                 jnp.asarray(req.prompt.size, jnp.int32),
@@ -385,7 +510,13 @@ class ContinuousEngine:
             )
             self._slot_req[slot] = req
             self._remaining[slot] = req.max_tokens
-            req.t_admit = time.perf_counter()
+            if obs.registry().enabled:
+                # Honest TTFT: the first token is computed by the prefill
+                # program, so block on it before stamping.  Only with obs
+                # on — the disabled path keeps the async pipeline and the
+                # stamp is a dispatch-time lower bound.
+                jax.block_until_ready(self._state["token"])
+            req.t_first_token = time.perf_counter()
 
     def _decode_once(self, params) -> None:
         self._state = self._decode_fn(params, self._state)
@@ -424,12 +555,48 @@ class ContinuousEngine:
     def run(self, params) -> List[Request]:
         """Drive until the queue and the pool are empty; returns every
         request finished since the last run (harvested, ``tokens`` filled)."""
-        self._ensure(params)
-        while self._queue or self.active:
-            self.step(params)
-        self._harvest()
+        reg = obs.registry()
+        with reg.span("engine.run", queued=len(self._queue)):
+            self._ensure(params)
+            while self._queue or self.active:
+                self.step(params)
+            self._harvest()
+        if reg.enabled:
+            self.publish_device_counters(reg)
         done, self._finished = self._finished, []
         return done
+
+    def device_counters(self) -> Dict[str, float]:
+        """The on-device ``obs.DeviceCounters`` pytree as host floats plus
+        the derived realized drop rate.  One sync — call at run/epoch
+        boundaries, not per step."""
+        if self._state is None:
+            host = {k: 0.0 for k in obs_device.COUNTER_KEYS}
+            host["realized_drop_rate"] = 0.0
+            return host
+        return obs_device.counters_to_host(self._state["obs"])
+
+    def publish_device_counters(self, reg=None) -> Dict[str, float]:
+        """Harvest the device counters into registry gauges."""
+        reg = reg or obs.registry()
+        host = self.device_counters()
+        for k, v in host.items():
+            reg.gauge(f"serve.device.{k}").set(v)
+        return host
+
+    def request_stats(self) -> Dict[str, float]:
+        """Per-request latency summaries (TTFT / TPOT / e2e, exact
+        percentiles) over the retained request window."""
+        from repro.obs import stats as obs_stats
+
+        out: Dict[str, float] = {"requests": float(len(self._req_metrics))}
+        for field in ("ttft_s", "tpot_s", "e2e_s"):
+            s = obs_stats.latency_summary(
+                [m[field] for m in self._req_metrics]
+            )
+            for k, v in s.items():
+                out[f"{field[:-2]}_{k}"] = v
+        return out
 
     def stats(self) -> Dict[str, float]:
         return {
@@ -441,6 +608,7 @@ class ContinuousEngine:
             "tokens_generated": self.tokens_generated,
             "slot_occupancy": self.busy_slot_steps
             / max(1, self.steps * self.pool.max_slots),
+            **self.request_stats(),
         }
 
     # -- one-shot batch API (launch.serve.generate rides this) -------------

@@ -45,6 +45,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.launch.steps import make_generate_fn
 from repro.models import cache as cache_lib
@@ -207,6 +208,16 @@ class DecodeEngine:
         t_total = time.perf_counter() - t0
         del final_cache  # aliased to the donated input; engine owns neither
         entry.calls += 1
+        reg = obs.registry()
+        if reg.enabled:
+            reg.record_span(
+                "decode_engine.generate", t0, t0 + t_total,
+                batch=b, prompt_len=s_prompt, tokens=num_tokens,
+                compiled=compiled_this_call,
+            )
+            reg.histogram("decode_engine.generate_s").observe(t_total)
+            reg.counter("decode_engine.tokens_generated").inc(b * num_tokens)
+            reg.counter("decode_engine.calls").inc()
         timings = {
             "generate_s": t_total,
             "decode_s_per_token": t_total / max(1, num_tokens),
