@@ -1,0 +1,13 @@
+# Convenience entry points; each target mirrors exactly what CI runs.
+PY ?= python3
+
+.PHONY: lint baseline test
+
+lint:                        ## static invariant checker (RPA001-RPA006)
+	PYTHONPATH=src $(PY) -m repro.analysis src tests benchmarks
+
+baseline:                    ## accept current findings as the tolerated set
+	PYTHONPATH=src $(PY) -m repro.analysis src tests benchmarks --write-baseline
+
+test:                        ## tier-1 tests
+	PYTHONPATH=src $(PY) -m pytest -x -q

@@ -110,8 +110,8 @@ def micro_bench(
         cache = _make_cache(
             jax.random.PRNGKey(1), b, max_seq, kvh, hd, kv_dtype, dtype
         )
-        old_fn = jax.jit(_full_cache_step)
-        new_fn = jax.jit(
+        old_fn = jax.jit(_full_cache_step)  # noqa: RPA001 — one deliberate compile per kv_dtype config
+        new_fn = jax.jit(  # noqa: RPA001 — one deliberate compile per kv_dtype config
             functools.partial(decode_attention, block_kv=block_kv)
         )
         rows = []

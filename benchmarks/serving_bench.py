@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis.guards import no_recompile
 from repro.configs import ARCHITECTURES, get_config
 from repro.models import lm
 from repro.obs import exporters
@@ -118,11 +119,15 @@ def run_bench(
     warm_compile_s = eng.compile_s
 
     t0 = time.perf_counter()
-    reqs = [
-        eng.submit(p, tokens, key=jax.random.fold_in(base_key, i))
-        for i, p in enumerate(prompts)
-    ]
-    eng.run(params)
+    # The steady-state contract, enforced at runtime: the warmed replay
+    # performs zero new XLA builds (guard watches jax.monitoring AND
+    # eng.compiles; a violation raises instead of silently skewing stats).
+    with no_recompile(engines=(eng,)):
+        reqs = [
+            eng.submit(p, tokens, key=jax.random.fold_in(base_key, i))
+            for i, p in enumerate(prompts)
+        ]
+        eng.run(params)
     t_eng = time.perf_counter() - t0
     completion = [r.t_done - t0 for r in reqs]
     eng_stats = {

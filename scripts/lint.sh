@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Run the repro.analysis static invariant checker the same way CI does.
+# Pure stdlib: needs python3, nothing installed.
+#
+#   scripts/lint.sh                 # check src tests benchmarks vs baseline
+#   scripts/lint.sh --no-baseline   # show every finding, baselined or not
+#   scripts/lint.sh --write-baseline  # accept current findings as tolerated
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src exec python3 -m repro.analysis src tests benchmarks "$@"

@@ -1,0 +1,31 @@
+"""repro.analysis — static invariant checker for this repro.
+
+Six AST rules (RPA001–RPA006) encode the invariants the rest of the repo
+enforces only at runtime: zero steady-state recompiles, single-use PRNG
+keys, donation discipline, the ``pallas_interpret`` policy, sync-point
+harvesting, and structured logging.  Run it as::
+
+    PYTHONPATH=src python -m repro.analysis src tests benchmarks
+
+Pure stdlib by design — the CI lint job installs nothing.  The
+jax-importing runtime half lives in :mod:`repro.analysis.guards` and
+must be imported explicitly.
+"""
+
+from repro.analysis import baseline
+from repro.analysis.core import (
+    Finding,
+    analyze_paths,
+    analyze_source,
+    iter_python_files,
+)
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "analyze_paths",
+    "analyze_source",
+    "baseline",
+    "iter_python_files",
+]

@@ -1,0 +1,122 @@
+"""CLI driver: ``python -m repro.analysis [paths...]``.
+
+Exit status: 0 when every finding is baselined (or none exist), 1 when
+new findings remain, 2 on usage errors.  ``--write-baseline`` records the
+current findings as the tolerated set; CI runs without it and therefore
+fails only on violations introduced since the baseline was committed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.core import analyze_paths
+from repro.analysis.rules import RULES
+
+
+def _discover_baseline(start: str) -> Optional[str]:
+    """Walk from ``start`` upward looking for the default baseline file."""
+    d = os.path.abspath(start)
+    while True:
+        cand = os.path.join(d, baseline_mod.DEFAULT_BASELINE)
+        if os.path.isfile(cand):
+            return cand
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant checker (rules RPA001-RPA006).",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to scan (default: src)",
+    )
+    parser.add_argument(
+        "--baseline", metavar="FILE", default=None,
+        help=f"baseline file (default: nearest {baseline_mod.DEFAULT_BASELINE}"
+             " in cwd or parents)",
+    )
+    parser.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore any baseline file; report every finding",
+    )
+    parser.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to the baseline file and exit 0",
+    )
+    parser.add_argument(
+        "--select", metavar="CODES", default=None,
+        help="comma-separated rule codes to run (e.g. RPA004,RPA006)",
+    )
+    parser.add_argument(
+        "--report", metavar="FILE", default=None,
+        help="also write the findings report to FILE",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule table and exit",
+    )
+    args = parser.parse_args(argv)
+    out = sys.stdout
+
+    if args.list_rules:
+        for code, rule in sorted(RULES.items()):
+            out.write(f"{code}  {rule.summary}\n")
+        return 0
+
+    select = None
+    if args.select:
+        select = [c.strip().upper() for c in args.select.split(",") if c.strip()]
+        unknown = [c for c in select if c not in RULES]
+        if unknown:
+            sys.stderr.write(f"unknown rule code(s): {', '.join(unknown)}\n")
+            return 2
+
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        sys.stderr.write(f"no such path(s): {', '.join(missing)}\n")
+        return 2
+
+    findings, n_files = analyze_paths(args.paths, select=select)
+
+    baseline_path = args.baseline
+    if baseline_path is None and not args.no_baseline:
+        baseline_path = _discover_baseline(os.getcwd())
+    if args.write_baseline:
+        baseline_path = baseline_path or baseline_mod.DEFAULT_BASELINE
+        n = baseline_mod.save(baseline_path, findings)
+        out.write(f"wrote {n} fingerprint(s) to {baseline_path}\n")
+        return 0
+
+    absorbed = 0
+    if baseline_path and not args.no_baseline:
+        findings, absorbed = baseline_mod.filter_new(
+            findings, baseline_mod.load(baseline_path)
+        )
+
+    lines = [f.render() for f in findings]
+    report = "\n".join(lines)
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            fh.write(report + ("\n" if report else ""))
+    if report:
+        out.write(report + "\n")
+
+    summary = f"{len(findings)} new finding(s) across {n_files} file(s)"
+    if absorbed:
+        summary += f" ({absorbed} baselined)"
+    out.write(summary + "\n")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

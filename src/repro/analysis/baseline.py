@@ -1,0 +1,75 @@
+"""Baseline file: known findings the analyzer tolerates.
+
+The baseline lets the analyzer land on a codebase with pre-existing
+findings and still gate CI on *new* violations only.  It stores one
+:attr:`Finding.fingerprint` per line — ``path::code::stripped-line-text``
+— deliberately line-number-free, so baselined findings survive edits
+elsewhere in the file but resurface as soon as the offending line itself
+is touched.
+
+Duplicate fingerprints (two identical violating lines in one file) are
+handled with counts: a baseline entry absorbs at most as many findings as
+it has occurrences in the file.
+
+Format: plain text, ``#`` comments and blank lines ignored, sorted on
+write.  Regenerate with ``python -m repro.analysis --write-baseline``.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Iterable, List, Sequence, Tuple
+
+from repro.analysis.core import Finding
+
+DEFAULT_BASELINE = ".rpa-baseline.txt"
+
+_HEADER = """\
+# repro.analysis baseline — known findings tolerated by CI.
+# One fingerprint per line: path::code::stripped-line-text
+# Regenerate: PYTHONPATH=src python -m repro.analysis src tests benchmarks --write-baseline
+"""
+
+
+def load(path: str) -> collections.Counter:
+    """Fingerprint -> tolerated count.  Missing file -> empty baseline."""
+    counts: collections.Counter = collections.Counter()
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            for raw in fh:
+                line = raw.strip()
+                if line and not line.startswith("#"):
+                    counts[line] += 1
+    except FileNotFoundError:
+        pass
+    return counts
+
+
+def save(path: str, findings: Iterable[Finding]) -> int:
+    """Write the baseline for ``findings``; returns entries written."""
+    fps = sorted(f.fingerprint for f in findings)
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(_HEADER)
+        for fp in fps:
+            fh.write(fp + "\n")
+    return len(fps)
+
+
+def filter_new(
+    findings: Sequence[Finding], baseline: collections.Counter
+) -> Tuple[List[Finding], int]:
+    """Split findings into (new, n_baselined).
+
+    Each baseline fingerprint absorbs up to its count; extra occurrences
+    of the same line are new findings.
+    """
+    budget = collections.Counter(baseline)
+    new: List[Finding] = []
+    absorbed = 0
+    for f in findings:
+        if budget[f.fingerprint] > 0:
+            budget[f.fingerprint] -= 1
+            absorbed += 1
+        else:
+            new.append(f)
+    return new, absorbed

@@ -1,0 +1,240 @@
+"""Analyzer driver: findings, noqa suppression, file walking.
+
+Pure stdlib (``ast`` + ``re``) so ``python -m repro.analysis`` runs in any
+environment — including the CI lint job, which deliberately installs
+nothing.  The jax-importing runtime half of the package lives in
+``repro.analysis.guards`` and is *not* imported here or by
+``repro.analysis.__init__``.
+
+A :class:`Finding` is one rule violation.  Its ``fingerprint`` — path,
+rule code, and the *stripped source line text* (not the line number) — is
+what the baseline file stores, so baselined findings survive unrelated
+edits that shift line numbers but resurface the moment the offending line
+itself changes.
+
+Suppression: ``# noqa`` on the violation line (or any line of the
+violating expression, for multi-line calls) suppresses every rule;
+``# noqa: RPA004`` or ``# noqa: RPA002, RPA005`` suppresses just those
+codes.  Trailing prose after the codes is allowed and encouraged —
+``# noqa: RPA005 — sanctioned sync point (honest TTFT)`` documents *why*
+the invariant is waived at this site.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+_NOQA_RE = re.compile(r"#\s*noqa\b(?P<rest>[^#]*)", re.IGNORECASE)
+_CODE_RE = re.compile(r"[A-Z]{3}\d{3}")
+
+#: sentinel meaning "a bare ``# noqa`` — every code suppressed"
+ALL_CODES = frozenset({"*"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str          # normalized, forward-slash, relative path
+    line: int          # 1-indexed
+    col: int           # 0-indexed
+    code: str          # "RPA001".."RPA006" ("RPA000" = unparseable file)
+    message: str
+    line_text: str = ""   # stripped source line (baseline fingerprint key)
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.path}::{self.code}::{self.line_text}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+def _parse_noqa(lines: Sequence[str]) -> Dict[int, frozenset]:
+    """Map 1-indexed line number -> set of suppressed codes (or ALL_CODES)."""
+    out: Dict[int, frozenset] = {}
+    for i, text in enumerate(lines):
+        if "noqa" not in text.lower():
+            continue
+        m = _NOQA_RE.search(text)
+        if not m:
+            continue
+        rest = m.group("rest") or ""
+        codes = frozenset(_CODE_RE.findall(rest)) if ":" in rest else frozenset()
+        out[i + 1] = codes or ALL_CODES
+    return out
+
+
+class ModuleContext:
+    """One parsed module handed to every rule.
+
+    Rules report through :meth:`emit`, which applies noqa suppression and
+    records the finding.  ``path`` is the normalized relative path —
+    several rules key their scope off it (kernel layering, sanctioned jit
+    factories, benchmark/example allowances).
+    """
+
+    def __init__(self, path: str, tree: ast.Module, source: str):
+        self.path = path.replace(os.sep, "/")
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        self._noqa = _parse_noqa(self.lines)
+
+    def _suppressed(self, code: str, line: int, end_line: int) -> bool:
+        for ln in range(line, min(end_line, line + 9) + 1):
+            codes = self._noqa.get(ln)
+            if codes is not None and (codes is ALL_CODES or code in codes
+                                      or "*" in codes):
+                return True
+        return False
+
+    def line_text(self, line: int) -> str:
+        if 0 < line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def emit(self, node: ast.AST, code: str, message: str) -> None:
+        line = getattr(node, "lineno", 1) or 1
+        end = getattr(node, "end_lineno", None) or line
+        if self._suppressed(code, line, end):
+            return
+        self.findings.append(Finding(
+            path=self.path, line=line, col=getattr(node, "col_offset", 0) or 0,
+            code=code, message=message, line_text=self.line_text(line),
+        ))
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by several rules)
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def assigned_names(node: ast.AST) -> List[str]:
+    """Every plain name bound by an assignment target / loop target."""
+    out: List[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store, ast.Del)):
+            out.append(n.id)
+    return out
+
+
+def statement_targets(stmt: ast.stmt) -> List[str]:
+    """Names (re)bound by one statement, if it is an assignment."""
+    if isinstance(stmt, ast.Assign):
+        out: List[str] = []
+        for t in stmt.targets:
+            out.extend(assigned_names(t))
+        return out
+    if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        return assigned_names(stmt.target)
+    return []
+
+
+def statement_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """The expression children of a simple statement, in evaluation order."""
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value]
+    if isinstance(stmt, ast.AnnAssign):
+        return [stmt.value] if stmt.value is not None else []
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.value]
+    return [c for c in ast.iter_child_nodes(stmt) if isinstance(c, ast.expr)]
+
+
+def walk_no_scope(node: ast.AST) -> Iterable[ast.AST]:
+    """ast.walk, but does not descend into nested function/class scopes."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef,
+                          ast.Lambda)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def analyze_source(
+    path: str, source: str, select: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Run every (selected) rule over one module's source text."""
+    from repro.analysis import rules as rules_mod
+
+    norm = path.replace(os.sep, "/")
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(
+            path=norm, line=e.lineno or 1, col=(e.offset or 1) - 1,
+            code="RPA000", message=f"unparseable module: {e.msg}",
+        )]
+    ctx = ModuleContext(norm, tree, source)
+    for code, rule in rules_mod.RULES.items():
+        if select and code not in select:
+            continue
+        rule.check(ctx)
+    return sorted(ctx.findings, key=lambda f: (f.line, f.col, f.code))
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories to a sorted list of .py files (relative
+    paths preserved as given; ``__pycache__`` skipped)."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__" and not d.startswith("."))
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(root, f))
+    # de-dup while keeping deterministic order
+    seen, uniq = set(), []
+    for f in sorted(out):
+        n = os.path.normpath(f).replace(os.sep, "/")
+        if n not in seen:
+            seen.add(n)
+            uniq.append(f)
+    return uniq
+
+
+def analyze_paths(
+    paths: Sequence[str], select: Optional[Sequence[str]] = None
+) -> Tuple[List[Finding], int]:
+    """Analyze every .py under ``paths``; returns (findings, files_scanned)."""
+    findings: List[Finding] = []
+    files = iter_python_files(paths)
+    for f in files:
+        try:
+            with open(f, "r", encoding="utf-8") as fh:
+                src = fh.read()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                path=f.replace(os.sep, "/"), line=1, col=0, code="RPA000",
+                message=f"unreadable module: {e}",
+            ))
+            continue
+        findings.extend(analyze_source(f, src, select=select))
+    return findings, len(files)

@@ -1,0 +1,79 @@
+"""Runtime compile guard: assert a region performs zero XLA builds.
+
+The static rules in :mod:`repro.analysis.rules` catch retrace hazards the
+AST can see; :func:`no_recompile` catches the ones it can't — a shape
+that drifted, a weak-type promotion, a donation mismatch — by watching
+the actual compiler.  Two independent signals, the guard trips on either:
+
+* ``repro.obs.xla.builds_total()`` — a process-global counter fed by the
+  ``jax.monitoring`` backend-compile event, which fires exactly once per
+  XLA build and never on a cache hit;
+* any engine passed via ``engines=``, through its own ``compiles`` /
+  ``total_compiles()`` bookkeeping (covers environments where the
+  monitoring event is unavailable).
+
+This module imports jax (indirectly) and is deliberately **not** pulled
+in by ``repro.analysis.__init__`` — the static analyzer stays stdlib-only
+so the CI lint job runs with nothing installed.
+
+Usage::
+
+    from repro.analysis.guards import no_recompile
+
+    engine.submit(...); engine.run()        # warmup: compiles happen here
+    with no_recompile(engines=(engine,)):
+        engine.submit(...); engine.run()    # steady state: zero builds
+
+Anything that would trace a *new* program signature inside the region —
+including innocuous-looking ``jax.random.randint`` calls with fresh
+shapes — trips the guard; precompute such values before entering.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Sequence
+
+
+class RecompileError(AssertionError):
+    """An XLA build happened inside a ``no_recompile()`` region."""
+
+
+def _engine_compiles(engine) -> int:
+    total = getattr(engine, "total_compiles", None)
+    if callable(total):
+        return int(total())
+    return int(getattr(engine, "compiles", 0))
+
+
+@contextlib.contextmanager
+def no_recompile(
+    allowed: int = 0, engines: Sequence[object] = ()
+) -> Iterator[None]:
+    """Assert at most ``allowed`` XLA builds happen inside the block.
+
+    ``engines`` may hold any objects exposing a ``compiles`` attribute or
+    ``total_compiles()`` method (both serve engines do); their deltas are
+    checked alongside the process-global monitoring counter.
+    """
+    from repro.obs import xla
+
+    xla.ensure_subscribed()
+    before_builds = xla.builds_total()
+    before_engines = [_engine_compiles(e) for e in engines]
+    yield
+    build_delta = xla.builds_total() - before_builds
+    engine_delta = sum(
+        _engine_compiles(e) - b for e, b in zip(engines, before_engines)
+    )
+    worst = max(build_delta, engine_delta)
+    if worst > allowed:
+        detail = f"{build_delta} XLA build(s) observed via jax.monitoring"
+        if engines:
+            detail += f", {engine_delta} via engine compile counters"
+        raise RecompileError(
+            f"no_recompile(allowed={allowed}) violated: {detail}. "
+            "Something inside the guarded region traced a new program "
+            "signature — check for shape drift, fresh jit wrappers, or "
+            "un-warmed code paths."
+        )

@@ -1,0 +1,703 @@
+"""The six RPA rules: the repo's runtime invariants as static checks.
+
+| code   | invariant it guards                                               |
+|--------|-------------------------------------------------------------------|
+| RPA001 | zero steady-state recompiles: no ``jax.jit`` / ``lower().compile``|
+|        | inside loops outside the sanctioned AOT factories, no unhashable  |
+|        | static args (every call would retrace)                            |
+| RPA002 | greedy token identity: a PRNG key is consumed at most once —      |
+|        | reuse forks the reference key chain silently                      |
+| RPA003 | donated buffers are dead after the call: ``donate_argnums`` args  |
+|        | alias the output, reading them afterwards is use-after-free       |
+| RPA004 | kernel discipline: every ``pallas_call`` resolves interpret mode  |
+|        | through ``kernels.runtime.pallas_interpret``; kernel/ref modules  |
+|        | import nothing above the kernels layer                            |
+| RPA005 | sync-point harvesting: no hidden host syncs (``.item()``,         |
+|        | ``np.asarray``, ``block_until_ready``...) inside traced scopes or |
+|        | the engines' steady-state step functions                          |
+| RPA006 | structured logging: no bare ``print(`` outside benchmarks/        |
+|        | examples/scripts (use ``repro.obs.get_logger``)                   |
+
+Rules are heuristic by design: they encode this repo's conventions (which
+factories are sanctioned, which files are the kernel layer), favor few
+false positives over completeness, and every finding can be waived with a
+``# noqa: RPA###`` carrying its justification.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (
+    ModuleContext,
+    assigned_names,
+    dotted_name,
+    statement_exprs,
+    statement_targets,
+    walk_no_scope,
+)
+
+RULES: Dict[str, "Rule"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    check: Callable[[ModuleContext], None]
+
+
+def _rule(code: str, summary: str):
+    def deco(fn):
+        RULES[code] = Rule(code, summary, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# RPA001 — retrace hazards
+# ---------------------------------------------------------------------------
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit"}
+# Modules whose whole job is building jitted programs inside scheduling
+# loops (compile-cached / AOT): jit-in-loop is their design, not a hazard.
+_SANCTIONED_JIT_FILES = (
+    "repro/serve/engine.py",
+    "repro/serve/continuous.py",
+    "repro/launch/steps.py",
+)
+_UNHASHABLE_ANNOTATIONS = {"list", "dict", "set", "List", "Dict", "Set",
+                           "bytearray"}
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    return dotted_name(call.func) in _JIT_NAMES
+
+
+def _is_aot_compile(call: ast.Call) -> bool:
+    """``<anything>.lower(...).compile(...)`` — an explicit XLA build."""
+    f = call.func
+    return (
+        isinstance(f, ast.Attribute) and f.attr == "compile"
+        and isinstance(f.value, ast.Call)
+        and isinstance(f.value.func, ast.Attribute)
+        and f.value.func.attr == "lower"
+    )
+
+
+def _static_spec(call: ast.Call) -> Tuple[List[int], List[str]]:
+    """(static_argnums, static_argnames) literal values of a jit call."""
+    nums: List[int] = []
+    names: List[str] = []
+
+    def ints(v):
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return [e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+        return []
+
+    def strs(v):
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return [e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+        return []
+
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            nums = ints(kw.value)
+        elif kw.arg == "static_argnames":
+            names = strs(kw.value)
+    return nums, names
+
+
+def _unhashable_static_params(
+    fn: ast.FunctionDef, nums: Sequence[int], names: Sequence[str]
+) -> List[str]:
+    """Static params whose default or annotation is an unhashable type."""
+    params = list(fn.args.posonlyargs) + list(fn.args.args)
+    picked = {params[i].arg for i in nums if 0 <= i < len(params)}
+    picked.update(n for n in names if any(p.arg == n for p in params))
+    # align defaults to the tail of the positional params
+    defaults = {
+        params[len(params) - len(fn.args.defaults) + i].arg: d
+        for i, d in enumerate(fn.args.defaults)
+    }
+    bad: List[str] = []
+    for p in params:
+        if p.arg not in picked:
+            continue
+        d = defaults.get(p.arg)
+        if isinstance(d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            bad.append(p.arg)
+            continue
+        ann = p.annotation
+        base = None
+        if isinstance(ann, ast.Name):
+            base = ann.id
+        elif isinstance(ann, ast.Subscript) and isinstance(ann.value, ast.Name):
+            base = ann.value.id
+        if base in _UNHASHABLE_ANNOTATIONS:
+            bad.append(p.arg)
+    return bad
+
+
+@_rule("RPA001", "retrace hazard: jit/AOT-compile in a loop or "
+                 "unhashable static args")
+def rule_retrace_hazard(ctx: ModuleContext) -> None:
+    defs = {n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef)}
+    sanctioned = ctx.path.endswith(_SANCTIONED_JIT_FILES)
+
+    # (a) jit / lower().compile() lexically inside a loop body — every
+    # iteration traces and builds a fresh program.
+    def scan(node: ast.AST, loop_depth: int) -> None:
+        for child in ast.iter_child_nodes(node):
+            depth = loop_depth
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                depth = 0    # a def in a loop runs its body only when called
+            elif isinstance(child, (ast.For, ast.AsyncFor, ast.While)):
+                depth = loop_depth + 1
+            elif depth and isinstance(child, ast.Call) and (
+                _is_jit_call(child) or _is_aot_compile(child)
+            ):
+                if not sanctioned:
+                    what = ("jax.jit" if _is_jit_call(child)
+                            else "lower().compile()")
+                    ctx.emit(
+                        child, "RPA001",
+                        f"{what} inside a loop — one XLA build per iteration; "
+                        "hoist it or route through a sanctioned AOT factory "
+                        "(serve/engine.py, serve/continuous.py, "
+                        "launch/steps.py)",
+                    )
+                continue   # one finding per chain: don't re-flag the inner jit
+            scan(child, depth)
+
+    scan(ctx.tree, 0)
+
+    # (b) static args that cannot hash: every call is a cache miss.
+    def check_spec(call: ast.Call, fn: Optional[ast.FunctionDef]) -> None:
+        nums, names = _static_spec(call)
+        if not (nums or names) or fn is None:
+            return
+        for p in _unhashable_static_params(fn, nums, names):
+            ctx.emit(
+                call, "RPA001",
+                f"static arg {p!r} of jitted {fn.name!r} has an unhashable "
+                "default/annotation — every call re-traces (static args must "
+                "hash)",
+            )
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _is_jit_call(node):
+            target = None
+            if node.args and isinstance(node.args[0], ast.Name):
+                target = defs.get(node.args[0].id)
+            check_spec(node, target)
+        # decorator form: @partial(jax.jit, static_argnames=...)
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if (isinstance(dec, ast.Call)
+                        and dotted_name(dec.func) in ("partial",
+                                                      "functools.partial")
+                        and dec.args
+                        and dotted_name(dec.args[0]) in _JIT_NAMES):
+                    check_spec(dec, node)
+
+
+# ---------------------------------------------------------------------------
+# RPA002 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+# jax.random.* calls that do NOT count as consuming their key argument:
+# fold_in derives a fresh stream per (key, data) — calling it repeatedly
+# with different data is the sanctioned per-request pattern — and the
+# constructors/converters don't draw from the stream at all.
+_KEY_EXEMPT = {"fold_in", "PRNGKey", "key", "wrap_key_data", "key_data",
+               "clone", "key_impl", "typing"}
+
+
+def _random_prefixes(tree: ast.Module) -> Tuple[str, ...]:
+    """Call prefixes that mean jax.random in this module (alias-aware).
+    Plain stdlib ``import random`` does NOT register ``random.``."""
+    prefixes = ["jax.random."]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax":
+            for a in node.names:
+                if a.name == "random":
+                    prefixes.append((a.asname or a.name) + ".")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.random" and a.asname:
+                    prefixes.append(a.asname + ".")
+    return tuple(prefixes)
+
+
+def _key_consumes(expr: ast.AST, prefixes) -> List[Tuple[str, ast.Call]]:
+    """(key_name, call) for each consuming jax.random call in the expr,
+    in source order.  Only bare-Name first arguments are tracked."""
+    out = []
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted_name(node.func)
+        if not d or not d.startswith(prefixes):
+            continue
+        fname = d.rsplit(".", 1)[-1]
+        if fname in _KEY_EXEMPT:
+            continue
+        if node.args and isinstance(node.args[0], ast.Name):
+            out.append((node.args[0].id, node))
+    out.sort(key=lambda t: (t[1].lineno, t[1].col_offset))
+    return out
+
+
+@_rule("RPA002", "PRNG key consumed twice without split/fold_in")
+def rule_key_reuse(ctx: ModuleContext) -> None:
+    prefixes = _random_prefixes(ctx.tree)
+
+    def _imports_jax(n: ast.AST) -> bool:
+        if isinstance(n, ast.Import):
+            return any(a.name.split(".")[0] == "jax" for a in n.names)
+        if isinstance(n, ast.ImportFrom):
+            return bool(n.module) and n.module.split(".")[0] == "jax"
+        return False
+
+    if not any(_imports_jax(n) for n in ast.walk(ctx.tree)):
+        return
+
+    def visit_expr(expr: ast.AST, consumed: Dict[str, ast.Call]) -> None:
+        # comprehensions are loops: a consume of an outer key inside one
+        # runs once per element — reuse unless the key is comp-bound.
+        for comp in ast.walk(expr):
+            if isinstance(comp, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                 ast.GeneratorExp)):
+                bound = set()
+                for g in comp.generators:
+                    bound.update(assigned_names(g.target))
+                for name, call in _key_consumes(comp, prefixes):
+                    if name not in bound:
+                        ctx.emit(
+                            call, "RPA002",
+                            f"PRNG key {name!r} consumed inside a "
+                            "comprehension — one draw per element reuses the "
+                            "key; split it or fold_in per element",
+                        )
+        for name, call in _key_consumes(expr, prefixes):
+            if name in consumed:
+                prev = consumed[name]
+                ctx.emit(
+                    call, "RPA002",
+                    f"PRNG key {name!r} already consumed on line "
+                    f"{prev.lineno} — reuse forks the key chain; "
+                    "split/fold_in first",
+                )
+            else:
+                consumed[name] = call
+
+    def process(body: Sequence[ast.stmt], consumed: Dict[str, ast.Call]):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue       # separate scope, analyzed on its own
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                head = stmt.iter if isinstance(
+                    stmt, (ast.For, ast.AsyncFor)) else stmt.test
+                visit_expr(head, consumed)
+                # a consume inside the loop body of a key neither bound by
+                # the loop target nor reassigned in the body repeats the
+                # same draw every iteration
+                rebound: Set[str] = set()
+                if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    rebound.update(assigned_names(stmt.target))
+                for s in stmt.body:
+                    for n in walk_no_scope(s):
+                        if isinstance(n, ast.Name) and isinstance(
+                                n.ctx, ast.Store):
+                            rebound.add(n.id)
+                    rebound.update(statement_targets(s) if isinstance(
+                        s, ast.stmt) else [])
+                flagged: Set[str] = set()
+                for s in stmt.body:
+                    if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                        continue
+                    for e in statement_exprs(s):
+                        for name, call in _key_consumes(e, prefixes):
+                            if name not in rebound and name not in flagged:
+                                flagged.add(name)
+                                ctx.emit(
+                                    call, "RPA002",
+                                    f"PRNG key {name!r} consumed inside a "
+                                    "loop without reassignment — every "
+                                    "iteration redraws from the same key",
+                                )
+                process(stmt.body, consumed)
+                process(stmt.orelse, consumed)
+            elif isinstance(stmt, ast.If):
+                visit_expr(stmt.test, consumed)
+                c_then = dict(consumed)
+                c_else = dict(consumed)
+                process(stmt.body, c_then)
+                process(stmt.orelse, c_else)
+                consumed.update(c_then)
+                consumed.update(c_else)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    visit_expr(item.context_expr, consumed)
+                process(stmt.body, consumed)
+            elif isinstance(stmt, ast.Try):
+                process(stmt.body, consumed)
+                for h in stmt.handlers:
+                    process(h.body, consumed)
+                process(stmt.orelse, consumed)
+                process(stmt.finalbody, consumed)
+            else:
+                for e in statement_exprs(stmt):
+                    visit_expr(e, consumed)
+                for t in statement_targets(stmt):
+                    consumed.pop(t, None)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            process(node.body, {})
+    process(ctx.tree.body, {})
+
+
+# ---------------------------------------------------------------------------
+# RPA003 — donation after use
+# ---------------------------------------------------------------------------
+
+def _donated_positions(call: ast.Call,
+                       defs: Dict[str, ast.FunctionDef]) -> List[int]:
+    """Literal donate_argnums positions of a jit call (donate_argnames are
+    resolved through the wrapped function's signature when it is a
+    module-local def)."""
+    nums: List[int] = []
+    names: List[str] = []
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                nums.append(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                nums.extend(e.value for e in v.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, int))
+        elif kw.arg == "donate_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.append(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                names.extend(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+    if names and call.args and isinstance(call.args[0], ast.Name):
+        fn = defs.get(call.args[0].id)
+        if fn is not None:
+            params = [p.arg for p in
+                      list(fn.args.posonlyargs) + list(fn.args.args)]
+            nums.extend(params.index(n) for n in names if n in params)
+    return sorted(set(nums))
+
+
+def _innermost_jit(call: ast.Call) -> Optional[ast.Call]:
+    """Unwrap ``jax.jit(...)``, ``jax.jit(...).lower(...).compile()``."""
+    node: ast.AST = call
+    for _ in range(6):
+        if isinstance(node, ast.Call):
+            if _is_jit_call(node):
+                return node
+            node = node.func
+        elif isinstance(node, ast.Attribute):
+            node = node.value
+        else:
+            return None
+    return None
+
+
+@_rule("RPA003", "buffer referenced after being donated to a jitted call")
+def rule_donation_after_use(ctx: ModuleContext) -> None:
+    defs = {n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef)}
+
+    def scan_scope(body: Sequence[ast.stmt]) -> None:
+        donators: Dict[str, List[int]] = {}     # fn var -> donated positions
+        donated: Dict[str, ast.Call] = {}       # buffer var -> donating call
+
+        def visit_expr(expr: ast.AST) -> None:
+            nodes = [n for n in ast.walk(expr)]
+            nodes.sort(key=lambda n: (getattr(n, "lineno", 0),
+                                      getattr(n, "col_offset", 0)))
+            for n in nodes:
+                if isinstance(n, ast.Call):
+                    positions: List[int] = []
+                    if (isinstance(n.func, ast.Name)
+                            and n.func.id in donators):
+                        positions = donators[n.func.id]
+                    else:
+                        inner = (_innermost_jit(n.func)
+                                 if isinstance(n.func, ast.Call) else None)
+                        if inner is not None:
+                            positions = _donated_positions(inner, defs)
+                    for p in positions:
+                        if p < len(n.args) and isinstance(n.args[p], ast.Name):
+                            donated.setdefault(n.args[p].id, n)
+                elif (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                        and n.id in donated):
+                    call = donated[n.id]
+                    # the donating call's own argument read is not a use-after
+                    if (n.lineno, n.col_offset) > (call.lineno,
+                                                   call.col_offset) and not (
+                        call.lineno <= n.lineno <= (call.end_lineno or
+                                                    call.lineno)
+                    ):
+                        ctx.emit(
+                            n, "RPA003",
+                            f"{n.id!r} was donated to the jitted call on "
+                            f"line {call.lineno} (donate_argnums) — its "
+                            "buffer is aliased to the output; reading it "
+                            "after the call is use-after-donation",
+                        )
+                        donated.pop(n.id, None)
+
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for e in statement_exprs(stmt):
+                visit_expr(e)
+            for t in statement_targets(stmt):
+                donated.pop(t, None)
+                donators.pop(t, None)
+            # record jit-with-donation factories:  f = jax.jit(step, donate...)
+            # (after the target pop, so the fresh binding survives)
+            if isinstance(stmt, ast.Assign) and isinstance(
+                    stmt.value, ast.Call):
+                inner = _innermost_jit(stmt.value)
+                if inner is not None:
+                    pos = _donated_positions(inner, defs)
+                    if pos:
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name):
+                                donators[t.id] = pos
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While, ast.If,
+                                 ast.With, ast.Try)):
+                for sub in (getattr(stmt, "body", []),
+                            getattr(stmt, "orelse", []),
+                            getattr(stmt, "finalbody", [])):
+                    if sub:
+                        scan_scope(sub)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_scope(node.body)
+    scan_scope(ctx.tree.body)
+
+
+# ---------------------------------------------------------------------------
+# RPA004 — Pallas discipline
+# ---------------------------------------------------------------------------
+
+_KERNEL_FILE_RE = re.compile(r"(?:^|/)kernels/[^/]+/(kernel|ref|ops)\.py$")
+# imports allowed per kernel-package layer: kernel/ref are the bottom of
+# the stack (jax/pallas/numpy + the shared kernels runtime only); ops.py
+# is the model-facing boundary and may additionally reach repro.core
+# specs (QuantSpec etc.) — never models/serve/launch/net/obs.
+_KERNEL_LAYER_ALLOWED = {
+    "kernel": ("repro.kernels",),
+    "ref": ("repro.kernels",),
+    "ops": ("repro.kernels", "repro.core"),
+}
+
+
+@_rule("RPA004", "pallas_call with literal interpret= or kernel-layer "
+                 "import violation")
+def rule_pallas_discipline(ctx: ModuleContext) -> None:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d and (d == "pallas_call" or d.endswith(".pallas_call")):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and isinstance(
+                            kw.value, ast.Constant):
+                        ctx.emit(
+                            kw.value, "RPA004",
+                            f"pallas_call(interpret={kw.value.value!r}) "
+                            "hardcodes the execution mode — resolve it "
+                            "through kernels.runtime.pallas_interpret() so "
+                            "backend detection and REPRO_PALLAS_INTERPRET "
+                            "keep working",
+                        )
+
+    m = _KERNEL_FILE_RE.search(ctx.path)
+    if not m:
+        return
+    allowed = _KERNEL_LAYER_ALLOWED[m.group(1)]
+    for node in ast.walk(ctx.tree):
+        mods: List[Tuple[str, ast.AST]] = []
+        if isinstance(node, ast.Import):
+            mods = [(a.name, node) for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mods = [(node.module, node)]
+        for mod, n in mods:
+            if mod.startswith("repro") and not mod.startswith(allowed):
+                ctx.emit(
+                    n, "RPA004",
+                    f"{m.group(1)}.py imports {mod!r} — kernel packages "
+                    "must stay below the model/serve layers "
+                    f"(allowed prefixes: {', '.join(allowed)})",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RPA005 — hidden host syncs in traced / steady-state scopes
+# ---------------------------------------------------------------------------
+
+_TRANSFORM_NAMES = {
+    "jax.jit", "jit", "jax.pjit", "pjit", "jax.vmap", "vmap", "jax.pmap",
+    "pmap", "jax.grad", "grad", "jax.value_and_grad", "value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.scan", "lax.scan",
+    "jax.lax.while_loop", "lax.while_loop", "jax.lax.fori_loop",
+    "lax.fori_loop", "jax.lax.cond", "lax.cond", "jax.lax.map", "lax.map",
+    "shard_map", "jax.experimental.shard_map.shard_map",
+}
+_SYNC_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get", "device_get",
+}
+_STEADY_STATE = {
+    "repro/serve/continuous.py": {"_decode_once", "_admit", "step"},
+    "repro/serve/engine.py": set(),
+}
+
+
+def _decorated_as_traced(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        d = dotted_name(dec)
+        if d in _TRANSFORM_NAMES:
+            return True
+        if isinstance(dec, ast.Call):
+            d = dotted_name(dec.func)
+            if d in _TRANSFORM_NAMES:
+                return True
+            if d in ("partial", "functools.partial") and dec.args and \
+                    dotted_name(dec.args[0]) in _TRANSFORM_NAMES:
+                return True
+    return False
+
+
+def _transform_arg_names(tree: ast.Module) -> Set[str]:
+    """Function names passed (by name) to a jax transform anywhere in the
+    module — their bodies run under trace."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and dotted_name(
+                node.func) in _TRANSFORM_NAMES:
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    out.add(a.id)
+    return out
+
+
+def _steady_state_names(path: str) -> Set[str]:
+    for suffix, names in _STEADY_STATE.items():
+        if path.endswith(suffix):
+            return set(names)
+    return set()
+
+
+@_rule("RPA005", "hidden host sync inside a traced or steady-state scope")
+def rule_hidden_host_sync(ctx: ModuleContext) -> None:
+    traced_names = _transform_arg_names(ctx.tree)
+    steady = _steady_state_names(ctx.path)
+    in_steps_factory_file = ctx.path.endswith("repro/launch/steps.py")
+
+    def flag_syncs(fn: ast.FunctionDef, why: str) -> None:
+        for node in walk_no_scope(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            msg = None
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                msg = ".item() forces a device->host sync"
+            elif d in _SYNC_CALLS:
+                msg = f"{d}() materializes the value on host"
+            elif d and d.endswith("block_until_ready"):
+                msg = "block_until_ready blocks the host on device work"
+            elif (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int")
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)):
+                msg = (f"{node.func.id}() on a traced value forces a "
+                       "device->host sync")
+            if msg:
+                ctx.emit(
+                    node, "RPA005",
+                    f"{msg} inside {why} — harvest at an existing sync "
+                    "point instead (see obs/device.py), or waive with a "
+                    "justified noqa",
+                )
+
+    def walk_defs(node: ast.AST, traced: bool, factory: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = child.name
+                child_factory = name.startswith("_make_") or (
+                    in_steps_factory_file
+                    and (name.startswith("make_")
+                         or name.startswith("build_"))
+                )
+                child_traced = (
+                    traced
+                    or factory            # defs nested in a step factory
+                    or _decorated_as_traced(child)
+                    or name in traced_names
+                )
+                if isinstance(child, ast.FunctionDef):
+                    if child_traced:
+                        flag_syncs(child, f"jit-traced scope {name!r}")
+                    elif name in steady:
+                        flag_syncs(
+                            child,
+                            f"steady-state engine path {name!r}",
+                        )
+                walk_defs(child, child_traced, child_factory)
+            else:
+                walk_defs(child, traced, factory)
+
+    walk_defs(ctx.tree, False, False)
+
+
+# ---------------------------------------------------------------------------
+# RPA006 — bare print
+# ---------------------------------------------------------------------------
+
+_PRINT_ALLOWED_DIRS = ("benchmarks/", "examples/", "scripts/")
+
+
+@_rule("RPA006", "bare print() outside benchmarks/examples")
+def rule_bare_print(ctx: ModuleContext) -> None:
+    parts = ctx.path.split("/")
+    for d in _PRINT_ALLOWED_DIRS:
+        if d.rstrip("/") in parts:
+            return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "print":
+            ctx.emit(
+                node, "RPA006",
+                "bare print() — use repro.obs.get_logger(...) so "
+                "REPRO_LOG_LEVEL and log capture keep working "
+                "(benchmarks/ and examples/ are exempt)",
+            )

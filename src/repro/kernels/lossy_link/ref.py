@@ -39,7 +39,7 @@ def burst_mask_ref(
 ) -> jax.Array:
     """Pure-jnp Gilbert–Elliott oracle (lax.scan over the packet axis);
     identical comparisons to the Pallas kernel, so masks match exactly."""
-    from repro.net.channels import gilbert_elliott_scan
+    from repro.net.channels import gilbert_elliott_scan  # noqa: RPA004 — oracle defers to the channel model so masks stay bit-exact; lazy import, no cycle
 
     return gilbert_elliott_scan(
         u_init, u_loss, u_tr, p_gb, p_bg, loss_good, loss_bad

@@ -25,8 +25,11 @@ import jax
 from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config, get_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_sharded_step
+from repro.obs import get_logger
 from repro.optim import AdamConfig
 from repro.roofline import analysis as roofline
+
+log = get_logger("repro.launch.dryrun")
 
 
 def resolve_config(arch: str, shape_name: str, window: int = 8192):
@@ -65,7 +68,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     cost = compiled.cost_analysis()
     hlo = compiled.as_text()
     if print_hlo:
-        print(hlo)
+        log.info(hlo)
 
     tokens = shape_cfg.global_batch * (
         1 if shape_cfg.is_decode else shape_cfg.seq_len
@@ -105,15 +108,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         n_params=roofline.count_params(params_shapes),
         n_active_params=roofline.active_params(cfg, params_shapes),
     )
-    print(f"== {arch} x {shape_name} on {mesh_name} ({variant}) ==")
-    print(f"memory_analysis: {mem}")
-    print(
+    log.info(f"== {arch} x {shape_name} on {mesh_name} ({variant}) ==")
+    log.info(f"memory_analysis: {mem}")
+    log.info(
         f"analytic: flops={d['flops']:.3e} hbm_bytes={d['hbm_bytes']:.3e} | "
         f"raw cost_analysis (body-once): flops={d['raw_cost_flops']:.3e} "
         f"bytes={d['raw_cost_bytes']:.3e} | "
         f"collective_bytes/dev={d['collective_bytes']:.3e}"
     )
-    print(
+    log.info(
         f"roofline: compute={d['compute_s']:.3e}s memory={d['memory_s']:.3e}s "
         f"collective={d['collective_s']:.3e}s -> bottleneck={d['bottleneck']} "
         f"useful_flops_frac={d['useful_flops_frac']:.3f}"
@@ -153,7 +156,7 @@ def main():
     ok = True
     for arch, shape in pairs:
         if (arch, shape) in done:
-            print(f"skip {arch} x {shape} (already done)")
+            log.info(f"skip {arch} x {shape} (already done)")
             continue
         try:
             r = run_one(arch, shape, multi_pod=args.multi_pod,

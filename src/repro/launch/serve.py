@@ -33,6 +33,7 @@ from repro.core import ChannelConfig, comtune
 from repro.core.compression import Compressor, PCASpec, QuantSpec
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import cache as cache_lib, lm
+from repro.obs import get_logger
 from repro.serve import default_engine
 
 
@@ -236,9 +237,10 @@ def main():
         params, cfg, prompts, args.tokens, loss_rate=args.loss_rate, key=key,
         channel=args.channel,
     )
-    print("generated:", np.asarray(toks)[:, :10], "...")
+    log = get_logger("repro.launch.serve")
+    log.info(f"generated: {np.asarray(toks)[:, :10]} ...")
     for k, v in timings.items():
-        print(f"{k}: {v:.5f}")
+        log.info(f"{k}: {v:.5f}")
 
     # Per-round latency PMF under the selected protocol policy (repro.net),
     # at the selected channel's stationary loss rate (which for "fading" is
@@ -260,7 +262,9 @@ def main():
     lat, pmf = proto.latency_pmf(n_t, channel_cfg, loss_rate=p_eff)
     mean_lat = float(np.dot(lat, pmf))
     p99 = latency_quantile(lat, pmf, 0.99)
-    print(f"protocol={proto.name} E[link_latency_s]: {mean_lat:.5f} p99: {p99:.5f}")
+    log.info(
+        f"protocol={proto.name} E[link_latency_s]: {mean_lat:.5f} p99: {p99:.5f}"
+    )
 
 
 if __name__ == "__main__":

@@ -12,12 +12,16 @@ Three layers (see README "Observability"):
   trace, and the ``jax.profiler.trace`` wrapper.
 """
 
-from repro.obs import device, exporters, stats
+from repro.obs import device, exporters, stats, xla
 from repro.obs.log import get_logger
 from repro.obs.registry import Registry, disable, enable, registry
 
 # The DeviceCounters pytree constructor (the engine threads it as state).
 DeviceCounters = device.counter_zeros
+
+# Count XLA builds from process start: the xla_builds_total counter and
+# the analysis.guards.no_recompile() guard share this one subscription.
+xla.ensure_subscribed()
 
 __all__ = [
     "Registry",
@@ -28,5 +32,6 @@ __all__ = [
     "stats",
     "device",
     "exporters",
+    "xla",
     "DeviceCounters",
 ]

@@ -515,7 +515,7 @@ class ContinuousEngine:
                 # program, so block on it before stamping.  Only with obs
                 # on — the disabled path keeps the async pipeline and the
                 # stamp is a dispatch-time lower bound.
-                jax.block_until_ready(self._state["token"])
+                jax.block_until_ready(self._state["token"])  # noqa: RPA005 — sanctioned sync point (honest TTFT, obs-on only)
             req.t_first_token = time.perf_counter()
 
     def _decode_once(self, params) -> None:
@@ -537,7 +537,7 @@ class ContinuousEngine:
             # dispatch-time stamp would under-report completion latency
             # whenever execution lags the host (the sync only happens on
             # completion steps, so steady-state steps still pipeline).
-            jax.block_until_ready(self._state["out"])
+            jax.block_until_ready(self._state["out"])  # noqa: RPA005 — sanctioned sync point (completion steps only; steady steps pipeline)
             now = time.perf_counter()
             for slot, req in completed:
                 req.t_done = now

@@ -1,0 +1,614 @@
+"""Static invariant checker (repro.analysis): the six RPA rules, noqa
+suppression, the baseline, the CLI, and the runtime compile guard.
+
+Rule fixtures come in violation/clean pairs: the violation asserts the
+rule has teeth, the clean twin pins the sanctioned idiom (split-then-use,
+``pallas_interpret(...)``, sanctioned AOT factory files) so the rules
+can't silently start flagging the patterns the repo is built on.
+
+The self-check at the bottom is the acceptance bar from ISSUE 7:
+``python -m repro.analysis src tests benchmarks`` exits 0 on the repo at
+HEAD with the committed baseline, and exits nonzero on a seeded fixture
+tree violating all six rules.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Finding, RULES, analyze_source, baseline
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def codes(src, path="mod.py", select=None):
+    """Rule codes found in a dedented snippet, in report order."""
+    return [f.code for f in
+            analyze_source(path, textwrap.dedent(src), select=select)]
+
+
+# ---------------------------------------------------------------------------
+# RPA001 — retrace hazards
+# ---------------------------------------------------------------------------
+
+class TestRetraceHazard:
+    def test_jit_in_loop_flags(self):
+        assert codes("""
+            import jax
+            def run(fns, x):
+                for f in fns:
+                    jax.jit(f)(x)
+        """) == ["RPA001"]
+
+    def test_aot_compile_in_loop_flags(self):
+        assert codes("""
+            import jax
+            def run(fns, aval):
+                for f in fns:
+                    prog = jax.jit(f).lower(aval).compile()
+        """) == ["RPA001"]
+
+    def test_jit_outside_loop_clean(self):
+        assert codes("""
+            import jax
+            def run(f, xs):
+                g = jax.jit(f)
+                for x in xs:
+                    g(x)
+        """) == []
+
+    def test_def_inside_loop_is_not_a_loop_body(self):
+        # a def's body executes per *call*, not per loop iteration
+        assert codes("""
+            import jax
+            def build(fns):
+                out = []
+                for f in fns:
+                    def make(f=f):
+                        return jax.jit(f)
+                    out.append(make)
+                return out
+        """) == []
+
+    def test_sanctioned_factory_file_exempt(self):
+        src = """
+            import jax
+            def aot_all(fns, x):
+                for f in fns:
+                    jax.jit(f)(x)
+        """
+        assert codes(src, path="src/repro/serve/engine.py") == []
+        assert codes(src, path="src/repro/launch/steps.py") == []
+        assert codes(src) == ["RPA001"]
+
+    def test_unhashable_static_arg_flags(self):
+        assert codes("""
+            import jax
+            def step(x, buckets=[1, 2]):
+                return x
+            f = jax.jit(step, static_argnums=(1,))
+        """) == ["RPA001"]
+
+    def test_hashable_static_arg_clean(self):
+        assert codes("""
+            import jax
+            def step(x, n: int = 4):
+                return x
+            f = jax.jit(step, static_argnames=("n",))
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# RPA002 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+class TestKeyReuse:
+    def test_double_consume_flags(self):
+        assert codes("""
+            import jax
+            def sample(key):
+                a = jax.random.normal(key, (3,))
+                b = jax.random.uniform(key, (3,))
+                return a + b
+        """) == ["RPA002"]
+
+    def test_split_then_use_clean(self):
+        assert codes("""
+            import jax
+            def sample(key):
+                key, sub = jax.random.split(key)
+                a = jax.random.normal(sub, (3,))
+                key, sub = jax.random.split(key)
+                b = jax.random.uniform(sub, (3,))
+                return a + b
+        """) == []
+
+    def test_fold_in_does_not_consume(self):
+        assert codes("""
+            import jax
+            def per_request(key, n):
+                k0 = jax.random.fold_in(key, 0)
+                k1 = jax.random.fold_in(key, 1)
+                return jax.random.normal(k0, (n,)) + jax.random.normal(k1, (n,))
+        """) == []
+
+    def test_loop_consume_without_reassign_flags(self):
+        assert codes("""
+            import jax
+            def noisy(key, xs):
+                out = []
+                for x in xs:
+                    out.append(x + jax.random.normal(key, x.shape))
+                return out
+        """) == ["RPA002"]
+
+    def test_loop_with_split_reassign_clean(self):
+        assert codes("""
+            import jax
+            def noisy(key, xs):
+                out = []
+                for x in xs:
+                    key, sub = jax.random.split(key)
+                    out.append(x + jax.random.normal(sub, x.shape))
+                return out
+        """) == []
+
+    def test_alias_import_detected(self):
+        assert codes("""
+            from jax import random
+            def sample(key):
+                a = random.normal(key, (3,))
+                b = random.normal(key, (3,))
+                return a + b
+        """) == ["RPA002"]
+
+    def test_stdlib_random_not_confused(self):
+        assert codes("""
+            import random
+            import jax
+            def roll(key):
+                a = random.random()
+                b = random.random()
+                return a + b
+        """) == []
+
+    def test_if_branches_do_not_cross_consume(self):
+        assert codes("""
+            import jax
+            def sample(key, flag):
+                if flag:
+                    return jax.random.normal(key, (3,))
+                else:
+                    return jax.random.uniform(key, (3,))
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# RPA003 — donation after use
+# ---------------------------------------------------------------------------
+
+class TestDonationAfterUse:
+    def test_use_after_donate_flags(self):
+        assert codes("""
+            import jax
+            def run(step_fn, state, x):
+                step = jax.jit(step_fn, donate_argnums=(0,))
+                out = step(state, x)
+                return out + state.mean()
+        """) == ["RPA003"]
+
+    def test_direct_call_form_flags(self):
+        assert codes("""
+            import jax
+            def run(step_fn, state, x):
+                out = jax.jit(step_fn, donate_argnums=(0,))(state, x)
+                return out, state
+        """) == ["RPA003"]
+
+    def test_donate_argnames_resolved_through_def(self):
+        assert codes("""
+            import jax
+            def step(state, x):
+                return state + x
+            def run(state, x):
+                f = jax.jit(step, donate_argnames=("state",))
+                out = f(state, x)
+                return out + state
+        """) == ["RPA003"]
+
+    def test_rebind_after_donate_clean(self):
+        # the canonical donation idiom: overwrite the donated name
+        assert codes("""
+            import jax
+            def run(step_fn, state, x):
+                step = jax.jit(step_fn, donate_argnums=(0,))
+                state = step(state, x)
+                return state
+        """) == []
+
+    def test_no_donation_clean(self):
+        assert codes("""
+            import jax
+            def run(step_fn, state, x):
+                step = jax.jit(step_fn)
+                out = step(state, x)
+                return out + state
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# RPA004 — Pallas discipline
+# ---------------------------------------------------------------------------
+
+class TestPallasDiscipline:
+    def test_literal_interpret_flags(self):
+        assert codes("""
+            import jax.experimental.pallas as pl
+            def op(kernel, shape):
+                return pl.pallas_call(kernel, out_shape=shape, interpret=True)
+        """) == ["RPA004"]
+
+    def test_pallas_interpret_call_clean(self):
+        assert codes("""
+            import jax.experimental.pallas as pl
+            from repro.kernels.runtime import pallas_interpret
+            def op(kernel, shape, interpret=None):
+                return pl.pallas_call(
+                    kernel, out_shape=shape,
+                    interpret=pallas_interpret(interpret),
+                )
+        """) == []
+
+    def test_kernel_layer_import_violation(self):
+        src = """
+            from repro.models import lm
+        """
+        assert codes(src, path="src/repro/kernels/fake/kernel.py") == ["RPA004"]
+        assert codes(src, path="src/repro/kernels/fake/ref.py") == ["RPA004"]
+        # same import is fine outside the kernel layer
+        assert codes(src, path="src/repro/serve/helper.py") == []
+
+    def test_ops_layer_may_import_core(self):
+        src = """
+            from repro.core.compression import QuantSpec
+            from repro.kernels.runtime import pallas_interpret
+        """
+        assert codes(src, path="src/repro/kernels/fake/ops.py") == []
+        assert codes(src, path="src/repro/kernels/fake/kernel.py") == ["RPA004"]
+
+
+# ---------------------------------------------------------------------------
+# RPA005 — hidden host syncs
+# ---------------------------------------------------------------------------
+
+class TestHiddenHostSync:
+    def test_item_in_jitted_def_flags(self):
+        assert codes("""
+            import jax
+            @jax.jit
+            def step(x):
+                return x.sum().item()
+        """) == ["RPA005"]
+
+    def test_float_on_name_in_traced_scope_flags(self):
+        assert codes("""
+            import jax
+            @jax.jit
+            def step(x):
+                y = x.sum()
+                return float(y)
+        """) == ["RPA005"]
+
+    def test_np_asarray_in_transform_target_flags(self):
+        # traced by name: step is passed to lax.scan
+        assert codes("""
+            import jax
+            import numpy as np
+            from jax import lax
+            def step(carry, x):
+                np.asarray(x)
+                return carry, x
+            def run(xs):
+                return lax.scan(step, 0, xs)
+        """) == ["RPA005"]
+
+    def test_nested_def_in_make_factory_flags(self):
+        assert codes("""
+            import jax
+            class Engine:
+                def _make_decode_step(self):
+                    def step(state, x):
+                        jax.block_until_ready(state)
+                        return state
+                    return step
+        """) == ["RPA005"]
+
+    def test_steady_state_engine_path_flags(self):
+        src = """
+            import jax
+            class Engine:
+                def _decode_once(self):
+                    jax.block_until_ready(self._state)
+        """
+        assert codes(src, path="src/repro/serve/continuous.py") == ["RPA005"]
+        assert codes(src, path="src/repro/other.py") == []
+
+    def test_host_side_code_clean(self):
+        assert codes("""
+            import numpy as np
+            def harvest(out):
+                return np.asarray(out)
+        """) == []
+
+
+# ---------------------------------------------------------------------------
+# RPA006 — bare print
+# ---------------------------------------------------------------------------
+
+class TestBarePrint:
+    def test_print_flags(self):
+        assert codes("print('hi')\n", path="src/repro/x.py") == ["RPA006"]
+
+    def test_benchmarks_and_examples_exempt(self):
+        assert codes("print('hi')\n", path="benchmarks/b.py") == []
+        assert codes("print('hi')\n", path="examples/e.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline
+# ---------------------------------------------------------------------------
+
+class TestSuppression:
+    def test_bare_noqa_suppresses_everything(self):
+        assert codes("print('hi')  # noqa\n", path="src/repro/x.py") == []
+
+    def test_code_specific_noqa(self):
+        assert codes("print('hi')  # noqa: RPA006\n",
+                     path="src/repro/x.py") == []
+        # the wrong code does not suppress
+        assert codes("print('hi')  # noqa: RPA001\n",
+                     path="src/repro/x.py") == ["RPA006"]
+
+    def test_noqa_with_justification_prose(self):
+        assert codes(
+            "print('hi')  # noqa: RPA006 — sanctioned CLI banner\n",
+            path="src/repro/x.py",
+        ) == []
+
+    def test_noqa_on_multiline_call(self):
+        assert codes("""
+            import jax
+            @jax.jit
+            def step(x):
+                return jax.block_until_ready(  # noqa: RPA005
+                    x
+                )
+        """) == []
+
+
+class TestBaseline:
+    def _finding(self, path="a.py", code="RPA006", line=3,
+                 text="print('x')"):
+        return Finding(path=path, line=line, col=0, code=code,
+                       message="m", line_text=text)
+
+    def test_roundtrip_and_filter(self, tmp_path):
+        f = self._finding()
+        p = tmp_path / "base.txt"
+        baseline.save(str(p), [f])
+        loaded = baseline.load(str(p))
+        new, absorbed = baseline.filter_new([f], loaded)
+        assert new == [] and absorbed == 1
+
+    def test_fingerprint_is_line_number_free(self, tmp_path):
+        p = tmp_path / "base.txt"
+        baseline.save(str(p), [self._finding(line=3)])
+        moved = self._finding(line=30)          # same line text, moved
+        new, absorbed = baseline.filter_new([moved], baseline.load(str(p)))
+        assert new == [] and absorbed == 1
+
+    def test_duplicate_lines_counted(self, tmp_path):
+        p = tmp_path / "base.txt"
+        baseline.save(str(p), [self._finding(line=3)])   # tolerates ONE
+        two = [self._finding(line=3), self._finding(line=9)]
+        new, absorbed = baseline.filter_new(two, baseline.load(str(p)))
+        assert len(new) == 1 and absorbed == 1
+
+    def test_changed_line_resurfaces(self, tmp_path):
+        p = tmp_path / "base.txt"
+        baseline.save(str(p), [self._finding(text="print('x')")])
+        edited = self._finding(text="print('y')")
+        new, _ = baseline.filter_new([edited], baseline.load(str(p)))
+        assert new == [edited]
+
+    def test_missing_baseline_is_empty(self, tmp_path):
+        assert baseline.load(str(tmp_path / "nope.txt")) == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI (subprocess, the real entry point)
+# ---------------------------------------------------------------------------
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120,
+    )
+
+
+class TestCLI:
+    def test_repo_at_head_is_clean_with_baseline(self):
+        """The ISSUE 7 self-check: HEAD + committed baseline -> exit 0."""
+        r = _run_cli(["src", "tests", "benchmarks"], cwd=REPO_ROOT)
+        assert r.returncode == 0, r.stdout + r.stderr
+
+    def test_seeded_violations_all_six_rules(self, tmp_path):
+        fixtures = {
+            "bad1.py": """
+                import jax
+                def run(fns, x):
+                    for f in fns:
+                        jax.jit(f)(x)
+            """,
+            "bad2.py": """
+                import jax
+                def sample(key):
+                    a = jax.random.normal(key, (3,))
+                    return a + jax.random.uniform(key, (3,))
+            """,
+            "bad3.py": """
+                import jax
+                def run(step_fn, state, x):
+                    step = jax.jit(step_fn, donate_argnums=(0,))
+                    out = step(state, x)
+                    return out + state
+            """,
+            "src/repro/kernels/fake/kernel.py": """
+                import jax.experimental.pallas as pl
+                from repro.models import lm
+                def op(k, shape):
+                    return pl.pallas_call(k, out_shape=shape, interpret=True)
+            """,
+            "bad5.py": """
+                import jax
+                @jax.jit
+                def step(x):
+                    return float(x)
+            """,
+            "bad6.py": """
+                def hello():
+                    print('hi')
+            """,
+        }
+        for rel, src in fixtures.items():
+            p = tmp_path / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(textwrap.dedent(src))
+        r = _run_cli([".", "--no-baseline"], cwd=tmp_path)
+        assert r.returncode == 1, r.stdout + r.stderr
+        for code in ("RPA001", "RPA002", "RPA003", "RPA004", "RPA005",
+                     "RPA006"):
+            assert code in r.stdout, (code, r.stdout)
+
+    def test_write_baseline_then_clean(self, tmp_path):
+        (tmp_path / "bad.py").write_text("print('hi')\n")
+        r = _run_cli([".", "--write-baseline"], cwd=tmp_path)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert (tmp_path / ".rpa-baseline.txt").exists()
+        r2 = _run_cli(["."], cwd=tmp_path)
+        assert r2.returncode == 0, r2.stdout + r2.stderr
+        # a NEW violation still fails
+        (tmp_path / "worse.py").write_text("print('no')\n")
+        r3 = _run_cli(["."], cwd=tmp_path)
+        assert r3.returncode == 1 and "worse.py" in r3.stdout
+
+    def test_select_limits_rules(self, tmp_path):
+        (tmp_path / "bad.py").write_text(
+            "import jax\ndef f(fns, x):\n    for g in fns:\n"
+            "        jax.jit(g)(x)\nprint('hi')\n"
+        )
+        r = _run_cli([".", "--no-baseline", "--select", "RPA006"],
+                     cwd=tmp_path)
+        assert "RPA006" in r.stdout and "RPA001" not in r.stdout
+
+    def test_report_file_written(self, tmp_path):
+        (tmp_path / "bad.py").write_text("print('hi')\n")
+        r = _run_cli([".", "--no-baseline", "--report", "out.txt"],
+                     cwd=tmp_path)
+        assert r.returncode == 1
+        assert "RPA006" in (tmp_path / "out.txt").read_text()
+
+    def test_list_rules(self, tmp_path):
+        r = _run_cli(["--list-rules"], cwd=tmp_path)
+        assert r.returncode == 0
+        assert all(c in r.stdout for c in RULES)
+
+    def test_syntax_error_reports_rpa000(self, tmp_path):
+        (tmp_path / "broken.py").write_text("def f(:\n")
+        r = _run_cli([".", "--no-baseline"], cwd=tmp_path)
+        assert r.returncode == 1 and "RPA000" in r.stdout
+
+
+def test_analysis_package_imports_without_jax():
+    """The CI lint job installs nothing: the static half must not pull in
+    jax (only ``repro.analysis.guards`` may)."""
+    code = (
+        "import sys\n"
+        "sys.modules['jax'] = None\n"   # poison: any import jax explodes
+        "import repro.analysis\n"
+        "import repro.analysis.__main__\n"
+        "print('ok')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0 and "ok" in r.stdout, r.stderr
+
+
+# ---------------------------------------------------------------------------
+# runtime half: guards.no_recompile
+# ---------------------------------------------------------------------------
+
+class TestNoRecompileGuard:
+    def test_warmed_call_passes(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis.guards import no_recompile
+
+        f = jax.jit(lambda x: x * 2)
+        f(jnp.ones(4))                      # warmup compile
+        with no_recompile():
+            for _ in range(3):
+                f(jnp.ones(4))              # cache hits only
+
+    def test_injected_retrace_is_caught(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis.guards import RecompileError, no_recompile
+
+        with pytest.raises(RecompileError):
+            with no_recompile():
+                # fresh wrapper -> guaranteed new trace + XLA build
+                jax.jit(lambda x: x * 3 + 1)(jnp.ones(4))  # noqa: RPA001 — the injected retrace this test exists to catch
+
+    def test_allowed_budget(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis.guards import no_recompile
+
+        with no_recompile(allowed=1):
+            jax.jit(lambda x: x - 11)(jnp.ones(4))  # noqa: RPA001 — single budgeted compile under test
+
+    def test_engine_counter_fallback(self):
+        from repro.analysis.guards import RecompileError, no_recompile
+
+        class FakeEngine:
+            compiles = 0
+
+        eng = FakeEngine()
+        with pytest.raises(RecompileError) as ei:
+            with no_recompile(engines=(eng,)):
+                eng.compiles += 2           # engine-side builds, no jax
+        assert "engine compile counters" in str(ei.value)
+
+    def test_xla_builds_total_counter_feeds_registry(self):
+        import jax
+        import jax.numpy as jnp
+        from repro import obs
+
+        obs.enable()
+        try:
+            c = obs.registry().counter("xla_builds_total")
+            before = c.value
+            jax.jit(lambda x: x + 13)(jnp.ones(4))  # noqa: RPA001 — deliberate compile to tick the counter
+            assert c.value == before + 1
+            assert obs.xla.builds_total() >= c.value
+        finally:
+            obs.disable()

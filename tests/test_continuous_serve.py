@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.guards import no_recompile
 from repro.configs import ARCHITECTURES
 from repro.launch.serve import generate, generate_reference
 from repro.models import lm
@@ -93,11 +94,18 @@ class TestZeroSteadyStateRecompiles:
         warm = eng.compiles
         # Steady state: more traffic on the same buckets, varying lengths
         # and budgets — requests join and retire mid-flight, nothing
-        # compiles or retraces.
-        for i in range(10):
-            eng.submit(_prompt(100 + i, 4 + (i % 13), cfg.vocab_size),
-                       1 + (i % 4), key=jax.random.fold_in(key, 100 + i))
-        done = eng.run(params)
+        # compiles or retraces.  Prompts and keys are computed BEFORE the
+        # guard: _prompt's randint traces a tiny program per fresh length,
+        # which is host-side test scaffolding, not engine steady state.
+        traffic = [
+            (_prompt(100 + i, 4 + (i % 13), cfg.vocab_size), 1 + (i % 4),
+             jax.random.fold_in(key, 100 + i))
+            for i in range(10)
+        ]
+        with no_recompile(engines=(eng,)):
+            for prompt, budget, k in traffic:
+                eng.submit(prompt, budget, key=k)
+            done = eng.run(params)
         assert len(done) == 10
         assert eng.compiles == warm
         assert eng.traces == warm

@@ -227,7 +227,7 @@ class TestNaiveFallbackPrefixSlice:
         for idx in (0, 5, 23, 30):               # 30 > C: wrapped window
             q, cache = _make_qcache(20 + idx, b, c, kvh, g, hd, quantized)
             sliced = _masked_decode_attn(q, cache, idx, 0.0, q.dtype)
-            masked = jax.jit(
+            masked = jax.jit(  # noqa: RPA001 — compile per idx is the point: the tracer must hit the masked branch
                 lambda i, q=q, cache=cache: _masked_decode_attn(
                     q, cache, i, 0.0, q.dtype
                 )

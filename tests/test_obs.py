@@ -27,6 +27,7 @@ import pytest
 from repro import obs
 from repro.configs import ARCHITECTURES
 from repro.launch.serve import generate_reference
+from repro.analysis.guards import no_recompile
 from repro.models import cache as cache_lib, lm
 from repro.obs import device as obs_device, exporters
 from repro.obs.registry import Registry
@@ -502,12 +503,19 @@ class TestObsProgramInvariance:
         eng.submit(_prompt(0, 5, cfg.vocab_size), 2, key=key)
         eng.run(params)
         warm = eng.compiles
+        # prompts/keys precomputed: _prompt's randint traces a throwaway
+        # program per fresh length, which the compile guard must not see
+        traffic = [
+            (_prompt(1 + i, 4 + i, cfg.vocab_size),
+             jax.random.fold_in(key, i))
+            for i in range(3)
+        ]
         reg.enable()
         try:
-            for i in range(3):
-                eng.submit(_prompt(1 + i, 4 + i, cfg.vocab_size), 2,
-                           key=jax.random.fold_in(key, i))
-            eng.run(params)
+            with no_recompile(engines=(eng,)):
+                for prompt, k in traffic:
+                    eng.submit(prompt, 2, key=k)
+                eng.run(params)
             assert eng.compiles == warm
             assert eng.traces == warm
         finally:
@@ -597,7 +605,7 @@ class TestTrainLinkMetrics:
         opt = init_adam(params, adam_cfg)
         tokens = jnp.zeros((2, 8), jnp.int32)
         for mode, expect_draws in (("train", True), ("off", False)):
-            step = jax.jit(make_train_step(cfg, adam_cfg, link_mode=mode))
+            step = jax.jit(make_train_step(cfg, adam_cfg, link_mode=mode))  # noqa: RPA001 — one compile per link_mode under test
             _, _, metrics = step(params, opt, {"tokens": tokens},
                                  jax.random.PRNGKey(0))
             for k in ("link_elems", "link_dropped", "fec_recovered_packets"):
