@@ -21,6 +21,20 @@ occupancy, and the old-engine baseline (warm and cold).
         [--out BENCH_serving.json] [--assert-max-compiles N] \
         [--assert-zero-steady-compiles] [--assert-min-rps 1.0] \
         [--assert-min-speedup 2.0]
+
+``--paged`` switches to the density comparison instead: a contiguous slot
+pool vs a PAGED block pool holding no more cache HBM, replaying one
+saturated workload through both.  The contiguous engine can only hold as
+many requests as worst-case ``max_seq`` slots fit; the paged engine
+reserves per-request blocks, so the same bytes sustain several times the
+in-flight requests (``active_median`` per decode step) and admission
+writes scale with the prompt's bucket instead of ``max_seq``.  Emits
+``BENCH_serving_paged.json``; greedy outputs are cross-checked
+token-for-token between the two engines, and both keep
+``compiles == num_buckets + 1``.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --paged \
+        [--assert-min-sustained-ratio 2.0] [--out BENCH_serving_paged.json]
 """
 
 from __future__ import annotations
@@ -36,7 +50,7 @@ import numpy as np
 from repro import obs
 from repro.analysis.guards import no_recompile
 from repro.configs import ARCHITECTURES, get_config
-from repro.models import lm
+from repro.models import cache as cache_lib, lm
 from repro.obs import exporters
 from repro.obs.stats import latency_summary
 from repro.serve import ContinuousEngine, DecodeEngine, PoolConfig
@@ -194,6 +208,153 @@ def run_bench(
     }
 
 
+def _replay(eng, params, prompts, tokens, base_key):
+    """Warm the engine's programs on one throwaway request per bucket,
+    then replay the saturated workload under the no-recompile guard.
+    Returns (requests, wall_s) with the concurrency window reset so
+    ``active_median`` measures the replay only."""
+    buckets = sorted({eng.bucket_for(len(p)) for p in prompts})
+    for i, b in enumerate(buckets):
+        p = next(p for p in prompts if eng.bucket_for(len(p)) == b)
+        eng.submit(p, 1, key=jax.random.fold_in(base_key, 10_000 + i))
+    eng.run(params)
+    eng.active_per_step.clear()
+    t0 = time.perf_counter()
+    with no_recompile(engines=(eng,)):
+        reqs = [
+            eng.submit(p, tokens, key=jax.random.fold_in(base_key, i))
+            for i, p in enumerate(prompts)
+        ]
+        eng.run(params)
+    return reqs, time.perf_counter() - t0
+
+
+def run_paged_bench(
+    arch: str = "qwen1.5-0.5b",
+    n_requests: int = 24,
+    tokens: int = 8,
+    loss_rate: float = 0.1,
+    channel: str = "iid",
+    seed: int = 0,
+    full_size: bool = False,
+) -> dict:
+    """Contiguous slot pool vs paged block pool at equal (or less) cache
+    HBM, one saturated replay each.  The contiguous pool's HBM budget
+    (``max_slots`` worst-case ``max_seq`` caches) is converted into pool
+    blocks; short requests then reserve only their own blocks, so the
+    paged engine keeps several times the requests in flight per step."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if not full_size:
+        cfg = cfg.reduced()
+    cfg = cfg.with_updates(
+        link=dataclasses.replace(cfg.link, loss_rate=loss_rate, channel=channel)
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    base_key = jax.random.PRNGKey(seed)
+
+    # Contiguous baseline: 2 worst-case slots.
+    pool_c = PoolConfig(max_slots=2, max_new=32, max_prompt=24)
+    contig_hbm = cache_lib.cache_bytes(cfg, pool_c.max_slots, pool_c.max_seq)
+    # Paged pool holding AT MOST the same bytes: block_pool_bytes is
+    # linear in num_blocks with zero intercept, so size by the per-block
+    # cost (block 0, the trash block, pays for itself out of the budget).
+    block_size = 8
+    per_block = cache_lib.block_pool_bytes(cfg, 3, block_size) \
+        - cache_lib.block_pool_bytes(cfg, 2, block_size)
+    num_blocks = contig_hbm // per_block
+    pool_p = PoolConfig(
+        max_slots=8, max_new=32, max_prompt=24,
+        paged=True, block_size=block_size, num_blocks=int(num_blocks),
+    )
+    paged_hbm = cache_lib.block_pool_bytes(cfg, pool_p.total_blocks, block_size)
+    assert paged_hbm <= contig_hbm, (paged_hbm, contig_hbm)
+
+    # Saturated workload: everything submitted up front.  Short prompts
+    # (one power-of-two bucket) keep the reservation arithmetic visible —
+    # each request needs ceil(max(8, len+tokens) / 8) blocks vs a whole
+    # contiguous max_seq slot.
+    rng = np.random.RandomState(seed)
+    prompts = [
+        rng.randint(0, cfg.vocab_size, size=(int(3 + i % 4),)).astype(np.int32)
+        for i in range(n_requests)
+    ]
+
+    results = {}
+    engines = {}
+    for name, pool in (("contiguous", pool_c), ("paged", pool_p)):
+        eng = ContinuousEngine(cfg, pool)
+        reqs, wall = _replay(eng, params, prompts, tokens, base_key)
+        s = eng.stats()
+        results[name] = {
+            "wall_s": wall,
+            "tokens_per_s": n_requests * tokens / wall,
+            "max_slots": pool.max_slots,
+            "cache_hbm_bytes": contig_hbm if name == "contiguous" else paged_hbm,
+            "sustained_in_flight": s["active_median"],
+            "active_peak": s["active_peak"],
+            "active_mean": s["active_mean"],
+            "compiles": eng.compiles,
+            "num_buckets": eng.num_buckets,
+            **{k: s[k] for k in
+               ("pool_blocks_total", "peak_blocks_used", "blocks_written")
+               if k in s},
+        }
+        engines[name] = (eng, reqs)
+        assert eng.compiles == eng.num_buckets + 1, (
+            name, eng.compiles, eng.num_buckets
+        )
+
+    # Same request keys through both engines -> identical greedy tokens
+    # (each engine is separately pinned to generate_reference in tests;
+    # the cross-check here keeps the bench honest end-to-end).
+    for rc, rp in zip(engines["contiguous"][1], engines["paged"][1]):
+        np.testing.assert_array_equal(rc.tokens, rp.tokens)
+
+    # Admission-copy bytes: the paged write scales with the bucket, the
+    # contiguous write is a constant full slot.
+    admission = {
+        "contiguous_any_bucket": cache_lib.admission_write_bytes(
+            cfg, pool_c.max_seq, pool_c.max_bucket
+        ),
+        "paged_bucket_8": cache_lib.admission_write_bytes(
+            cfg, pool_p.max_seq, 8, paged=True, block_size=block_size
+        ),
+        "paged_bucket_16": cache_lib.admission_write_bytes(
+            cfg, pool_p.max_seq, 16, paged=True, block_size=block_size
+        ),
+        "paged_bucket_32": cache_lib.admission_write_bytes(
+            cfg, pool_p.max_seq, 32, paged=True, block_size=block_size
+        ),
+    }
+    assert admission["contiguous_any_bucket"] == cache_lib.cache_bytes(
+        cfg, 1, pool_c.max_seq
+    )
+    assert (admission["paged_bucket_8"] < admission["paged_bucket_16"]
+            < admission["paged_bucket_32"]
+            <= admission["contiguous_any_bucket"])
+
+    ratio = results["paged"]["sustained_in_flight"] / max(
+        results["contiguous"]["sustained_in_flight"], 1e-9
+    )
+    return {
+        "bench": "serving_paged",
+        "arch": arch,
+        "n_requests": n_requests,
+        "tokens": tokens,
+        "block_size": block_size,
+        "loss_rate": loss_rate,
+        "channel": channel,
+        "backend": jax.default_backend(),
+        "equal_hbm_bytes": {"contiguous": contig_hbm, "paged": paged_hbm},
+        "admission_write_bytes": admission,
+        "contiguous": results["contiguous"],
+        "paged": results["paged"],
+        "sustained_ratio": ratio,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=sorted(ARCHITECTURES))
@@ -210,7 +371,17 @@ def main():
         "--smoke", action="store_true",
         help="reduced CPU preset: 3 prompt lengths (3 buckets), 8 tokens",
     )
-    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="density mode: contiguous vs paged block pool at equal cache "
+             "HBM (writes BENCH_serving_paged.json by default)",
+    )
+    ap.add_argument(
+        "--assert-min-sustained-ratio", type=float, default=None,
+        help="[--paged] fail unless paged sustains >= RATIO x the "
+             "contiguous engine's median in-flight requests",
+    )
+    ap.add_argument("--out", default=None)
     ap.add_argument("--assert-max-compiles", type=int, default=None,
                     help="fail if the engine built more XLA programs than this")
     ap.add_argument("--assert-zero-steady-compiles", action="store_true")
@@ -235,6 +406,9 @@ def main():
         help="fail unless the engine's realized on-device drop rate is > 0",
     )
     args = ap.parse_args()
+    if args.out is None:
+        args.out = "BENCH_serving_paged.json" if args.paged else \
+            "BENCH_serving.json"
 
     if args.obs_dir or args.assert_obs_span_chain:
         obs.enable()
@@ -242,6 +416,42 @@ def main():
         import os
 
         os.makedirs(args.obs_dir, exist_ok=True)
+
+    if args.paged:
+        result = run_paged_bench(
+            arch=args.arch,
+            n_requests=args.clients,
+            tokens=8 if args.smoke else args.tokens,
+            loss_rate=args.loss_rate,
+            channel=args.channel,
+            full_size=args.full_size,
+        )
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        c, p = result["contiguous"], result["paged"]
+        logger.info(
+            f"serving_bench --paged[{result['arch']} "
+            f"reqs={result['n_requests']}]: equal-HBM "
+            f"{result['equal_hbm_bytes']['paged'] / 1e6:.2f} MB — contiguous "
+            f"sustains {c['sustained_in_flight']:.0f} in-flight "
+            f"({c['max_slots']} slots), paged {p['sustained_in_flight']:.0f} "
+            f"({p['max_slots']} slots, {p['pool_blocks_total']:.0f} blocks) "
+            f"-> {result['sustained_ratio']:.1f}x density | admission copy "
+            f"{result['admission_write_bytes']['contiguous_any_bucket']} B "
+            f"-> {result['admission_write_bytes']['paged_bucket_8']} B "
+            f"(bucket 8) | compiles {c['compiles']}/{p['compiles']} "
+            f"-> {args.out}"
+        )
+        ok = True
+        if args.assert_min_sustained_ratio is not None and \
+                result["sustained_ratio"] < args.assert_min_sustained_ratio:
+            logger.error(
+                f"ASSERT FAILED: sustained ratio "
+                f"{result['sustained_ratio']:.2f}x < "
+                f"{args.assert_min_sustained_ratio}"
+            )
+            ok = False
+        raise SystemExit(0 if ok else 1)
 
     kw = {}
     if args.smoke:

@@ -1,13 +1,23 @@
-from repro.kernels.decode_attention.kernel import flash_decode_kernel
+from repro.kernels.decode_attention.kernel import (
+    flash_decode_kernel,
+    paged_flash_decode_kernel,
+)
 from repro.kernels.decode_attention.ops import (
     decode_attention,
     decode_block_kv,
+    paged_decode_attention,
 )
-from repro.kernels.decode_attention.ref import flash_decode_ref
+from repro.kernels.decode_attention.ref import (
+    flash_decode_ref,
+    paged_flash_decode_ref,
+)
 
 __all__ = [
     "decode_attention",
     "decode_block_kv",
     "flash_decode_kernel",
     "flash_decode_ref",
+    "paged_decode_attention",
+    "paged_flash_decode_kernel",
+    "paged_flash_decode_ref",
 ]

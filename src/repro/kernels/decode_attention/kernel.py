@@ -20,8 +20,11 @@ with this portable BlockSpec a compiled TPU run still DMAs the full
 (C, hd) panel into VMEM before the body runs, so the O(valid) HBM-bytes
 claim currently holds for the jnp fallback (``ref.py`` — XLA dynamic
 slices read only the walked blocks), while TPU gets the compute/dequant
-saving; closing the DMA gap needs a scalar-prefetch (SMEM) ``n_valid``
-with a block-clamped ``index_map`` — the ROADMAP PR-5 follow-up.
+saving.  ``paged_flash_decode_kernel`` below closes that gap for the
+block-pool layout: ``n_valid`` and the block table ride as
+scalar-prefetch (SMEM) operands of a ``PrefetchScalarGridSpec``, so the
+index map resolves physical blocks *before* each DMA fires and only
+walked blocks ever move — O(valid) bytes on TPU too.
 Rotating sliding-window caches need no extra handling: writes
 land at ``index % C`` (``models.attention._write_decode``), so the live
 slots are always the contiguous prefix ``[0, min(index + 1, C))`` — once
@@ -53,6 +56,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.runtime import pallas_interpret
 
@@ -151,3 +155,140 @@ def flash_decode_kernel(
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=pallas_interpret(interpret),
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: block-table walk with scalar-prefetch (SMEM) metadata
+# ---------------------------------------------------------------------------
+#
+# Same online-softmax arithmetic, different iteration structure: the KV
+# walk moves from a fori_loop inside one grid step to the (sequential,
+# minor) third grid dimension, because with a PrefetchScalarGridSpec it is
+# the *index map* — evaluated from SMEM-resident scalars before the DMA —
+# that picks which physical (block_size, hd) block to deliver.  Softmax
+# state (acc, m, l) persists across the j steps in VMEM scratch;
+# ``pl.when`` guards init (j == 0), the masked walk (j * block_size <
+# n_valid — blocks past the valid prefix are neither computed on nor, on
+# TPU, fetched), and the final normalize/write (last j).
+
+
+def _make_paged_kernel(*, block_size: int, softcap: float, quantized: bool):
+    def kernel(*refs):
+        if quantized:
+            (nv_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+             acc_ref, m_ref, l_ref) = refs
+        else:
+            (nv_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+             acc_ref, m_ref, l_ref) = refs
+            ks_ref = vs_ref = None
+        del bt_ref  # consumed by the index maps, not the body
+        i = pl.program_id(0)
+        j = pl.program_id(2)
+        n_valid = nv_ref[i]
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        @pl.when(j * block_size < n_valid)
+        def _block():
+            q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+            scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+            k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, hd)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+            if quantized:
+                k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+                v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale                                        # (G, bs)
+            if softcap > 0.0:
+                s = jnp.tanh(s / softcap) * softcap
+            k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+            msk = (k_pos < n_valid)[None, :]
+            s = jnp.where(msk, s, NEG_INF)
+            m = m_ref[:, 0]
+            l = l_ref[:, 0]
+            s_max = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, s_max)
+            p = jnp.exp(s - m_new[:, None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+            m_ref[...] = m_new[:, None]
+            l_ref[...] = l_new[:, None]
+
+        @pl.when(j == pl.num_programs(2) - 1)
+        def _finish():
+            o_ref[0, 0] = (
+                acc_ref[...] / jnp.maximum(l_ref[:, 0], 1e-20)[:, None]
+            ).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "softcap", "interpret")
+)
+def paged_flash_decode_kernel(
+    q: jax.Array,                        # (B, KV, G, hd)
+    k: jax.Array,                        # (N, bs, KV, hd) block pool
+    v: jax.Array,
+    k_scale: Optional[jax.Array],        # (N, bs, KV) or None
+    v_scale: Optional[jax.Array],
+    block_table: jax.Array,              # (B, J) int32 physical block ids
+    n_valid: jax.Array,                  # (B,) int32
+    *,
+    block_size: int,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, kvh, g, hd = q.shape
+    bs = k.shape[1]
+    assert bs == block_size, (bs, block_size)
+    j_l = block_table.shape[1]
+    quantized = k_scale is not None
+    kv_map = lambda i, h, j, nv, bt: (bt[i, j], 0, h, 0)
+    sc_map = lambda i, h, j, nv, bt: (bt[i, j], 0, h)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda i, h, j, nv, bt: (i, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+    ]
+    args = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1), sc_map),
+            pl.BlockSpec((1, bs, 1), sc_map),
+        ]
+        args += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, j_l),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd), lambda i, h, j, nv, bt: (i, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),                # acc
+            pltpu.VMEM((g, 1), jnp.float32),                 # m
+            pltpu.VMEM((g, 1), jnp.float32),                 # l
+        ],
+    )
+    return pl.pallas_call(
+        _make_paged_kernel(
+            block_size=block_size, softcap=softcap, quantized=quantized,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=pallas_interpret(interpret),
+    )(jnp.asarray(n_valid, jnp.int32), jnp.asarray(block_table, jnp.int32),
+      *args)

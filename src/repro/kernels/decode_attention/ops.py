@@ -26,8 +26,14 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import flash_decode_kernel
-from repro.kernels.decode_attention.ref import flash_decode_ref
+from repro.kernels.decode_attention.kernel import (
+    flash_decode_kernel,
+    paged_flash_decode_kernel,
+)
+from repro.kernels.decode_attention.ref import (
+    flash_decode_ref,
+    paged_flash_decode_ref,
+)
 
 IMPL_ENV_VAR = "REPRO_FLASH_DECODE_IMPL"
 
@@ -109,5 +115,54 @@ def decode_attention(
     else:
         out = flash_decode_ref(
             qh, k, v, k_scale, v_scale, n, block_kv=bkv, softcap=softcap
+        )
+    return out[:, None]
+
+
+def paged_decode_attention(
+    q: jax.Array,                        # (B, 1, KV, G, hd) grouped query
+    pool: Dict[str, Any],                # k/v (N, bs, KV, hd) [+ k/v_scale]
+    block_table: jax.Array,              # (B, J_max) int32 physical blocks
+    n_valid: jax.Array,                  # (B,) live-row count per request
+    *,
+    seq_len: int,                        # this layer's rotating cache length
+    block_size: int,
+    softcap: float = 0.0,
+    impl: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Length-masked decode attention over a shared block pool.
+
+    The paged twin of :func:`decode_attention`: same return contract
+    ``(B, 1, KV, G, hd)`` in ``q.dtype``, but K/V rows live in
+    ``(num_blocks, block_size, KV, hd)`` pool buffers addressed through
+    each request's block-table row.  ``seq_len`` is static (the layer's
+    ``cache_len``), so the table is sliced to this layer's
+    ``ceil(seq_len / block_size)`` walkable blocks at trace time —
+    windowed layers never index past their own rotation, and the padded
+    tail rows of a short last block stay behind the ``k_pos < n_valid``
+    mask (``n_valid <= seq_len``).  No pad/copy path is needed here: pool
+    blocks are whole by construction.
+    """
+    b, s, kvh, g, hd = q.shape
+    assert s == 1, f"decode attention is the s == 1 path, got S={s}"
+    k, v = pool["k"], pool["v"]
+    k_scale = pool.get("k_scale")
+    v_scale = pool.get("v_scale")
+    assert k.shape[1] == block_size, (k.shape, block_size)
+    j_l = -(-seq_len // block_size)
+    assert block_table.shape[1] >= j_l, (block_table.shape, j_l)
+    bt = jnp.asarray(block_table, jnp.int32)[:, :j_l]
+    n = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1), (b,))
+    qh = q[:, 0]                                             # (B, KV, G, hd)
+    if _impl(impl) == "kernel":
+        out = paged_flash_decode_kernel(
+            qh, k, v, k_scale, v_scale, bt, n,
+            block_size=block_size, softcap=softcap, interpret=interpret,
+        )
+    else:
+        out = paged_flash_decode_ref(
+            qh, k, v, k_scale, v_scale, bt, n,
+            block_size=block_size, softcap=softcap,
         )
     return out[:, None]

@@ -30,7 +30,7 @@ length-masked decode paths rely on.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,24 @@ from repro.models import rope as rope_lib
 from repro.models.common import Params, dense_init, split_keys, zeros_init
 
 NEG_INF = -1.0e30
+
+
+class PagedIndex(NamedTuple):
+    """Paged-decode coordinates, passed as ``cache_index`` when the decode
+    state is a block pool instead of a contiguous cache.
+
+    The stack closes over ``cache_index`` (it is not a scan operand), so the
+    static ``max_seq`` / ``block_size`` ints ride through ``run_stack``
+    untouched and each layer derives its own rotating length from them.
+    ``live`` routes dead slots' decode writes to the reserved trash block 0
+    — with a shared pool, a retired slot's blocks may already belong to a
+    new request, so dirty writes must land somewhere unowned."""
+
+    lengths: jax.Array        # (B,) int32 — tokens already cached per slot
+    block_table: jax.Array    # (B, J) int32 — physical block ids (0 = trash)
+    live: jax.Array           # (B,) bool — slot currently owns its blocks
+    max_seq: int
+    block_size: int
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +304,35 @@ def _write_decode(cache: Params, k: jax.Array, v: jax.Array, index) -> Params:
     return {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
 
 
+def _write_decode_paged(
+    cache: Params, k: jax.Array, v: jax.Array, idx: PagedIndex, c_len: int
+) -> Params:
+    """Paged twin of :func:`_write_decode`: scatter each slot's one new
+    position into its block-table row.  Logical row ``lengths % c_len``
+    (same rotation as contiguous) maps to block ``row // block_size``,
+    offset ``row % block_size``; dead slots write trash block 0."""
+    bs = cache["k"].shape[1]
+    row = idx.lengths % c_len                                    # (B,)
+    ent = jnp.take_along_axis(
+        idx.block_table, (row // bs)[:, None], axis=1
+    )[:, 0]
+    phys = jnp.where(idx.live, ent, 0)
+    rin = row % bs
+
+    def upd(buf, val):
+        return buf.at[phys, rin].set(val)
+
+    if _is_quantized(cache):
+        kq, ks = _quantize_kv(k[:, 0])
+        vq, vs = _quantize_kv(v[:, 0])
+        return {
+            "k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+            "k_scale": upd(cache["k_scale"], ks),
+            "v_scale": upd(cache["v_scale"], vs),
+        }
+    return {"k": upd(cache["k"], k[:, 0]), "v": upd(cache["v"], v[:, 0])}
+
+
 def _concrete_index(cache_index) -> Optional[int]:
     """``cache_index`` as a Python int when it is statically known (plain
     int or concrete jax scalar outside jit); None for tracers."""
@@ -383,7 +430,23 @@ def attention_forward(
         qg, k, v = _constrain_attention(qg, k, v, cfg)
 
     new_cache = None
-    if cache is not None and s == 1:
+    if cache is not None and s == 1 and isinstance(cache_index, PagedIndex):
+        # ---- paged decode: scatter into the block pool, attend via the
+        # block table.  Always the flash-decode kernel/ref — the block
+        # pool has no contiguous layout for the naive oracle to read.
+        idx = cache_index
+        c = cache_len(spec, idx.max_seq)
+        new_cache = _write_decode_paged(cache, k, v, idx, c)
+        from repro.kernels.decode_attention import paged_decode_attention
+
+        n_valid = jnp.minimum(idx.lengths.astype(jnp.int32) + 1, c)
+        out = paged_decode_attention(
+            qg, new_cache, idx.block_table, n_valid,
+            seq_len=c,
+            block_size=idx.block_size,
+            softcap=cfg.logit_softcap,
+        )
+    elif cache is not None and s == 1:
         # ---- decode: write one slot, attend over the rotating buffer ----
         new_cache = _write_decode(cache, k, v, cache_index)
         if cfg.attn_impl in ("flash_decode", "blockwise"):

@@ -166,6 +166,60 @@ def make_link_fn(
     return fn
 
 
+def make_slotwise_link_fn(
+    cfg: ModelConfig,
+    link_params: Params,
+    keys: jax.Array,                   # (B, 2) uint32 — one key per slot
+    mode: str,
+    loss_rate: Optional[float] = None,
+    link_spec: Optional[comtune.LinkSpec] = None,
+    live: Optional[jax.Array] = None,  # (B,) bool — weights for obs totals
+):
+    """Per-slot link for a *batched* decode step over shared state.
+
+    The contiguous slot-pool engine vmaps the whole serve step, so each
+    lane's :func:`make_link_fn` closure naturally draws from that lane's
+    key.  The paged engine cannot vmap (the block pool is shared across
+    slots), so this builds the equivalent batched link: the split-point
+    activation ``(B, S, d)`` is vmapped row-by-row through
+    ``comtune.emulate_link`` with per-slot keys — bitwise the same draws
+    as the vmapped-engine form.  Each row's tap totals come out of the
+    vmap as batched outputs and are re-published to the ambient collector
+    weighted by ``live`` (matching the contiguous engine's live-masked
+    counter accumulation; dead slots still compute, but never count).
+    """
+    if mode == "off":
+        return None
+    compressor = _compressor_from_params(cfg, link_params)
+    if link_spec is None:
+        link_spec = link_spec_from_config(cfg, loss_rate=loss_rate)
+    elif loss_rate is not None:
+        link_spec = link_spec.with_channel_loss_rate(loss_rate)
+    spec = dataclasses.replace(link_spec, compressor=compressor)
+
+    from repro.obs import device as obs_device
+
+    def fn(x):                                       # (B, S, d)
+        def one(k, xr):
+            with obs_device.tap_link_stats() as tap:
+                y = comtune.emulate_link(k, xr[None], spec, mode)
+                totals = tap.totals()
+            return y[0], totals
+
+        y, totals = jax.vmap(one)(keys, x)
+        w = (
+            jnp.ones((x.shape[0],), jnp.float32)
+            if live is None
+            else live.astype(jnp.float32)
+        )
+        obs_device.emit(
+            {name: jnp.sum(w * v) for name, v in totals.items()}
+        )
+        return y
+
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

@@ -47,6 +47,14 @@ Models with recurrent layers (mamba/xLSTM) or sliding windows shorter than
 the largest bucket fall back to exact-length buckets: right padding would
 leak into their recurrent/rotating state, so each distinct prompt length
 compiles its own prefill (still compile-cached and AOT).
+
+Paged mode (``PoolConfig(paged=True)``) swaps the per-slot contiguous
+caches for a shared block pool (``models.cache.init_block_pool``) with
+per-slot block tables: admission reserves only the blocks a request can
+touch instead of a full ``max_seq`` cache, the bucketed prefill copies just
+the prompt's blocks into the pool, and the fused decode step follows each
+slot's table through the paged flash-decode attention.  Same exactness and
+compile contracts as above; see ``_make_paged_decode_step``.
 """
 
 from __future__ import annotations
@@ -63,7 +71,7 @@ import numpy as np
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.launch.steps import make_serve_step
-from repro.models import cache as cache_lib, lm
+from repro.models import attention as attention_lib, cache as cache_lib, lm
 from repro.obs import device as obs_device
 from repro.serve.engine import abstract_like
 
@@ -91,7 +99,18 @@ def padding_safe(cfg: ModelConfig, max_bucket: int) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
-    """Static shape/behavior of one slot pool (one compile signature)."""
+    """Static shape/behavior of one slot pool (one compile signature).
+
+    ``paged=True`` switches the decode state from ``max_slots`` contiguous
+    ``max_seq``-row caches to a shared block pool of ``num_blocks`` x
+    ``block_size`` KV rows with per-slot block tables — admission then
+    reserves only the blocks a request can actually touch
+    (``ceil(min(max(bucket, prompt + max_tokens), max_seq) / block_size)``),
+    so ``max_slots`` can exceed what worst-case-contiguous HBM would allow.
+    ``num_blocks=0`` derives the worst-case-equivalent pool
+    (``max_slots * blocks_per_slot`` + the reserved trash block); set it
+    explicitly to oversubscribe.
+    """
 
     max_slots: int = 8
     max_new: int = 64            # per-request generation budget ceiling
@@ -99,6 +118,9 @@ class PoolConfig:
     min_bucket: int = 8          # smallest prefill bucket (power-of-two grid)
     greedy: bool = True
     temperature: float = 1.0
+    paged: bool = False
+    block_size: int = 16         # KV rows per pool block (paged only)
+    num_blocks: int = 0          # physical blocks incl. trash; 0 = derive
 
     @property
     def max_bucket(self) -> int:
@@ -107,6 +129,17 @@ class PoolConfig:
     @property
     def max_seq(self) -> int:
         return self.max_bucket + self.max_new
+
+    @property
+    def blocks_per_slot(self) -> int:
+        """Block-table row width: blocks a worst-case request reserves."""
+        return -(-self.max_seq // self.block_size)
+
+    @property
+    def total_blocks(self) -> int:
+        if self.num_blocks:
+            return self.num_blocks
+        return self.max_slots * self.blocks_per_slot + 1
 
 
 @dataclasses.dataclass
@@ -175,6 +208,19 @@ class ContinuousEngine:
             cfg = cfg.with_updates(attn_impl=attn_impl)
         self.cfg = cfg
         self.pool = pool or PoolConfig()
+        if self.pool.paged:
+            bad = sorted(
+                {s.kind for s in cfg.all_layers() if s.kind != "attn"}
+            )
+            if bad:
+                raise ValueError(
+                    f"paged slot pools support attention-only stacks; {cfg.name!r} "
+                    f"has {bad} layers (O(1) recurrent state — nothing to page)"
+                )
+            if self.pool.total_blocks < 2:
+                raise ValueError(
+                    "paged pool needs >= 2 blocks (block 0 is the trash block)"
+                )
         self._padded = padding_safe(cfg, self.pool.max_bucket)
         # Device state + AOT executables (built lazily on first use, since
         # they need the parameter shapes).
@@ -190,6 +236,17 @@ class ContinuousEngine:
         self._finished: List[Request] = []
         self._req_metrics: collections.deque = collections.deque(maxlen=4096)
         self._rid = 0
+        # Paged-pool host allocator: block 0 is the reserved trash block
+        # and is never handed out; free list is LIFO so a freed request's
+        # blocks are reused first (stale-row safety is the n_valid mask's
+        # job, not the allocator's).
+        self._free_blocks: List[int] = (
+            list(range(self.pool.total_blocks - 1, 0, -1))
+            if self.pool.paged else []
+        )
+        self._slot_blocks: List[List[int]] = [
+            [] for _ in range(self.pool.max_slots)
+        ]
         # Counters / stats.
         self.compiles = 0
         self.traces = 0
@@ -197,6 +254,11 @@ class ContinuousEngine:
         self.steps = 0
         self.busy_slot_steps = 0
         self.tokens_generated = 0
+        self.blocks_written = 0
+        self.peak_blocks_used = 0
+        self.active_per_step: collections.deque = collections.deque(
+            maxlen=65536
+        )
 
     # -- static program construction --------------------------------------
 
@@ -216,8 +278,14 @@ class ContinuousEngine:
 
     def _init_state(self) -> Dict[str, Any]:
         p = self.pool
-        return {
-            "cache": cache_lib.init_slot_pool(self.cfg, p.max_slots, p.max_seq),
+        if p.paged:
+            cache = cache_lib.init_block_pool(
+                self.cfg, p.total_blocks, p.block_size
+            )
+        else:
+            cache = cache_lib.init_slot_pool(self.cfg, p.max_slots, p.max_seq)
+        state = {
+            "cache": cache,
             "token": jnp.zeros((p.max_slots, 1, 1), jnp.int32),
             "length": jnp.zeros((p.max_slots,), jnp.int32),
             "key": jnp.zeros((p.max_slots, 2), jnp.uint32),
@@ -231,8 +299,18 @@ class ContinuousEngine:
             # invariant is independent of observability.
             "obs": obs_device.counter_zeros(),
         }
+        if p.paged:
+            # Per-slot block-table rows (zero-padded: unreserved entries
+            # point at the trash block).  Data, not shape — admission and
+            # retirement rewrite rows without retracing anything.
+            state["block_table"] = jnp.zeros(
+                (p.max_slots, p.blocks_per_slot), jnp.int32
+            )
+        return state
 
     def _make_decode_step(self):
+        if self.pool.paged:
+            return self._make_paged_decode_step()
         cfg, pool = self.cfg, self.pool
         step = make_serve_step(cfg)
         masked_attn = cfg.attn_impl != "naive"
@@ -316,10 +394,125 @@ class ContinuousEngine:
 
         return pool_step
 
-    def _make_prefill(self, bucket: int):
+    def _make_paged_decode_step(self):
+        """The fused decode step over the SHARED block pool.
+
+        The contiguous step vmaps a batch-1 serve step over the slot axis;
+        a shared pool cannot be vmapped (every slot scatters into the same
+        buffers), so this runs ONE batched forward over all slots instead:
+        per-slot lengths become the ``(B, 1)`` position batch, the
+        per-slot link rounds come from ``lm.make_slotwise_link_fn`` (an
+        inner vmap with per-slot keys — bitwise the draws the vmapped
+        engine makes), and the paged attention branch
+        (``models.attention`` + ``kernels.decode_attention``) consumes the
+        block table through a ``PagedIndex``.  Every op is batch-row
+        independent, so per-slot results equal the vmapped form's — the
+        token-identity contract vs ``generate_reference`` is unchanged
+        (regression-tested under iid + GE + int8).  Scalar-state updates
+        are live-masked exactly like the contiguous step; dirty cache
+        writes by retired slots are routed to the trash block *inside*
+        ``_write_decode_paged`` (with a shared pool they could otherwise
+        land in blocks already reallocated to live requests).
+        """
         cfg, pool = self.cfg, self.pool
 
-        def prefill(params, state, prompt, true_len, slot, budget, rkey):
+        def pool_step(params, state):
+            live = state["n_gen"] < state["budget"]
+            if pool.greedy:
+                ks = jax.vmap(jax.random.split)(state["key"])    # (B, 2, 2)
+                key2, sub, kcat = ks[:, 0], ks[:, 1], None
+            else:
+                ks = jax.vmap(lambda k: jax.random.split(k, 3))(state["key"])
+                key2, sub, kcat = ks[:, 0], ks[:, 1], ks[:, 2]
+            pidx = attention_lib.PagedIndex(
+                lengths=state["length"],
+                block_table=state["block_table"],
+                live=live,
+                max_seq=pool.max_seq,
+                block_size=pool.block_size,
+            )
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(
+                    state["length"][:, None, None],
+                    (pool.max_slots, 3, 1),
+                )
+            else:
+                positions = state["length"][:, None]
+            tokens = state["token"][:, 0]                        # (B, 1)
+            with obs_device.tap_link_stats() as tap:
+                link_fn = lm.make_slotwise_link_fn(
+                    cfg, params["link"], sub, "serve", live=live
+                )
+                logits, new_cache, _ = lm.forward(
+                    params, tokens, cfg,
+                    positions=positions,
+                    cache=state["cache"], cache_index=pidx,
+                    link_fn=link_fn, mode="decode",
+                )
+                link = tap.totals()
+            last = logits[:, 0]                                  # (B, V)
+            if pool.greedy:
+                nxt = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            else:
+                scaled = last.astype(jnp.float32) / jnp.float32(
+                    max(pool.temperature, 1e-6)
+                )
+                nxt = jax.vmap(jax.random.categorical)(kcat, scaled)[
+                    :, None
+                ].astype(jnp.int32)
+            # Emit the token fed INTO the round (reference-loop order).
+            out2 = jax.vmap(
+                lambda row, t, n: jax.lax.dynamic_update_slice(row, t, (n,))
+            )(state["out"], tokens[:, 0:1], state["n_gen"])
+            livec = live[:, None]
+            livef = live.astype(jnp.float32)
+            valid = (state["length"] + 1).astype(jnp.float32)
+            read_b = cache_lib.decode_read_bytes_jnp(
+                cfg, pool.max_seq, valid,
+                paged=True, block_size=pool.block_size,
+            )
+            c = state["obs"]
+            new_obs = {
+                "decode_steps": c["decode_steps"] + jnp.int32(1),
+                "valid_tokens": c["valid_tokens"] + jnp.sum(livef * valid),
+                "decode_read_bytes": c["decode_read_bytes"]
+                + jnp.sum(livef * read_b),
+                # Link totals arrive pre-masked: the slot-wise link fn
+                # weights each slot's draws by ``live`` before emitting.
+                "link_elems": c["link_elems"] + link["elems"],
+                "link_dropped": c["link_dropped"] + link["dropped"],
+                "fec_recovered_packets": c["fec_recovered_packets"]
+                + link["fec_recovered"],
+            }
+            return {
+                "cache": new_cache,
+                "block_table": state["block_table"],
+                "token": jnp.where(livec[..., None], nxt[:, :, None],
+                                   state["token"]),
+                "length": jnp.where(live, state["length"] + 1,
+                                    state["length"]),
+                "key": jnp.where(livec, key2, state["key"]),
+                "n_gen": jnp.where(live, state["n_gen"] + 1, state["n_gen"]),
+                "budget": state["budget"],
+                "out": jnp.where(livec, out2, state["out"]),
+                "obs": new_obs,
+            }
+
+        return pool_step
+
+    def _make_prefill(self, bucket: int):
+        cfg, pool = self.cfg, self.pool
+        # Paged admission writes a STATIC number of blocks per bucket
+        # program: the padded prompt occupies ceil(bucket / block_size)
+        # blocks (padded rows ride along exactly as in the contiguous slot
+        # copy — invisible behind causal masking and n_valid).  True_len
+        # stays data; the copy count must be shape-static.
+        nb_prompt = min(
+            -(-bucket // pool.block_size), pool.blocks_per_slot
+        ) if pool.paged else 0
+
+        def prefill(params, state, prompt, true_len, slot, budget, rkey,
+                    *rest):
             # Reference chain: key, sub = split(request_key); prefill(sub).
             key, sub = jax.random.split(rkey)
             fresh = cache_lib.init_cache(cfg, 1, pool.max_seq)
@@ -357,9 +550,25 @@ class ContinuousEngine:
                 "fec_recovered_packets": c["fec_recovered_packets"]
                 + link["fec_recovered"],
             }
+            if pool.paged:
+                (bt_row,) = rest
+                new_cache = cache_lib.write_prompt_blocks(
+                    state["cache"], filled, bt_row, nb_prompt,
+                    pool.block_size,
+                )
+                extra = {
+                    "block_table": jax.lax.dynamic_update_slice(
+                        state["block_table"], bt_row[None],
+                        (slot, jnp.int32(0)),
+                    ),
+                }
+            else:
+                new_cache = cache_lib.write_slot(state["cache"], filled, slot)
+                extra = {}
             return {
+                **extra,
                 "obs": new_obs,
-                "cache": cache_lib.write_slot(state["cache"], filled, slot),
+                "cache": new_cache,
                 "token": jax.lax.dynamic_update_slice(
                     state["token"], tok0[None], (slot, 0, 0)
                 ),
@@ -394,6 +603,12 @@ class ContinuousEngine:
                 scalar, scalar, scalar,
                 jax.ShapeDtypeStruct((2,), jnp.uint32),
             )
+            if self.pool.paged:
+                avals += (
+                    jax.ShapeDtypeStruct(
+                        (self.pool.blocks_per_slot,), jnp.int32
+                    ),
+                )
             fn = self._aot(self._make_prefill(bucket), (1,), avals)
             self._prefill_fns[bucket] = fn
         return fn
@@ -413,6 +628,17 @@ class ContinuousEngine:
     def active(self) -> int:
         return sum(r is not None for r in self._slot_req)
 
+    def _blocks_needed(self, prompt_len: int, max_tokens: int) -> int:
+        """Blocks one request reserves for its whole lifetime: the padded
+        prefill rows plus every decode write, capped by the rotation at
+        ``max_seq`` (and hence by the block-table row width)."""
+        p = self.pool
+        rows = min(
+            max(self.bucket_for(prompt_len), prompt_len + max_tokens),
+            p.max_seq,
+        )
+        return min(cache_lib.blocks_for(rows, p.block_size), p.blocks_per_slot)
+
     def submit(
         self, prompt, max_tokens: int, key: Optional[jax.Array] = None
     ) -> Request:
@@ -424,6 +650,20 @@ class ContinuousEngine:
         assert 1 <= max_tokens <= self.pool.max_new, (
             max_tokens, self.pool.max_new
         )
+        if self.pool.paged:
+            # Reject impossible requests at submission: admission blocks
+            # head-of-line on a full pool (progress is guaranteed because
+            # live requests retire), but a request needing more blocks than
+            # the pool HAS would deadlock the queue forever.
+            need = self._blocks_needed(prompt.size, int(max_tokens))
+            cap = self.pool.total_blocks - 1
+            if need > cap:
+                raise ValueError(
+                    f"request needs {need} pool blocks (prompt {prompt.size}, "
+                    f"max_tokens {max_tokens}, block_size "
+                    f"{self.pool.block_size}) but the pool only has {cap} "
+                    "allocatable blocks — it could never be admitted"
+                )
         if key is None:
             key = jax.random.PRNGKey(self._rid)
         req = Request(
@@ -484,7 +724,17 @@ class ContinuousEngine:
         reg.counter("serve.tokens_generated").inc(req.max_tokens)
 
     def _admit(self, params) -> None:
+        p = self.pool
         while self._queue and self._free:
+            if p.paged:
+                # Pool-exhaustion gate BEFORE committing to the admission:
+                # a full pool blocks head-of-line (live slots never lose
+                # blocks; retirements will free some) instead of partially
+                # admitting or stealing from a live request.
+                head = self._queue[0]
+                need = self._blocks_needed(head.prompt.size, head.max_tokens)
+                if need > len(self._free_blocks):
+                    break
             if self._pending_harvest:
                 # A freed slot's output row is about to be zeroed: read the
                 # finished requests first (one host sync for all of them).
@@ -496,6 +746,13 @@ class ContinuousEngine:
             padded = np.zeros((1, bucket), np.int32)
             padded[0, : req.prompt.size] = req.prompt
             req.bucket = bucket
+            extra = ()
+            if p.paged:
+                blocks = [self._free_blocks.pop() for _ in range(need)]
+                self._slot_blocks[slot] = blocks
+                bt_row = np.zeros((p.blocks_per_slot,), np.int32)
+                bt_row[: len(blocks)] = blocks
+                extra = (jnp.asarray(bt_row),)
             # Admission is the scheduling decision, so stamp it BEFORE the
             # prefill dispatch — the old after-dispatch stamp folded the
             # prefill into the "queue wait" phase and made TTFT's prefill
@@ -507,9 +764,20 @@ class ContinuousEngine:
                 jnp.asarray(slot, jnp.int32),
                 jnp.asarray(req.max_tokens, jnp.int32),
                 req.key,
+                *extra,
             )
             self._slot_req[slot] = req
             self._remaining[slot] = req.max_tokens
+            if p.paged:
+                nb = min(
+                    cache_lib.blocks_for(bucket, p.block_size),
+                    p.blocks_per_slot,
+                )
+                self.blocks_written += nb
+                used = sum(len(b) for b in self._slot_blocks)
+                self.peak_blocks_used = max(self.peak_blocks_used, used)
+                obs.registry().counter("serve.blocks_written").inc(nb)
+                self._publish_pool_gauges()
             if obs.registry().enabled:
                 # Honest TTFT: the first token is computed by the prefill
                 # program, so block on it before stamping.  Only with obs
@@ -518,7 +786,38 @@ class ContinuousEngine:
                 jax.block_until_ready(self._state["token"])  # noqa: RPA005 — sanctioned sync point (honest TTFT, obs-on only)
             req.t_first_token = time.perf_counter()
 
+    def _pool_fragmentation(self) -> float:
+        """Internal fragmentation of the live reservations: 1 − (rows
+        holding real tokens) / (rows reserved), over live slots.  0.0 with
+        nothing live."""
+        bs = self.pool.block_size
+        reserved = valid = 0
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            nres = len(self._slot_blocks[slot]) * bs
+            done_toks = req.max_tokens - self._remaining[slot]
+            valid += min(int(req.prompt.size) + done_toks, nres)
+            reserved += nres
+        if reserved == 0:
+            return 0.0
+        return 1.0 - valid / reserved
+
+    def _publish_pool_gauges(self) -> None:
+        """Paged-pool occupancy gauges, set at the existing host sync
+        points (admission / retirement — pure host-mirror reads, no extra
+        device sync)."""
+        reg = obs.registry()
+        reg.gauge("serve.pool_blocks_total").set(
+            float(self.pool.total_blocks - 1)
+        )
+        reg.gauge("serve.pool_blocks_used").set(
+            float(sum(len(b) for b in self._slot_blocks))
+        )
+        reg.gauge("serve.pool_fragmentation").set(self._pool_fragmentation())
+
     def _decode_once(self, params) -> None:
+        self.active_per_step.append(self.active)
         self._state = self._decode_fn(params, self._state)
         self.steps += 1
         completed = []
@@ -532,6 +831,15 @@ class ContinuousEngine:
                 completed.append((slot, req))
                 self._slot_req[slot] = None
                 self._free.append(slot)
+                if self.pool.paged:
+                    # LIFO free: the retired request's blocks go back in
+                    # reverse so the next admission reuses them first.
+                    self._free_blocks.extend(
+                        reversed(self._slot_blocks[slot])
+                    )
+                    self._slot_blocks[slot] = []
+        if completed and self.pool.paged:
+            self._publish_pool_gauges()
         if completed:
             # Block before stamping t_done: dispatch is async, so a
             # dispatch-time stamp would under-report completion latency
@@ -599,7 +907,8 @@ class ContinuousEngine:
         return out
 
     def stats(self) -> Dict[str, float]:
-        return {
+        active = sorted(self.active_per_step)
+        out = {
             "compiles": self.compiles,
             "traces": self.traces,
             "compile_s": self.compile_s,
@@ -608,8 +917,21 @@ class ContinuousEngine:
             "tokens_generated": self.tokens_generated,
             "slot_occupancy": self.busy_slot_steps
             / max(1, self.steps * self.pool.max_slots),
+            # Sustained concurrency: the in-flight request count per decode
+            # step — median is the bench's density metric (robust to the
+            # ramp-up/drain tails of a saturated run).
+            "active_median": float(active[len(active) // 2]) if active else 0.0,
+            "active_peak": float(active[-1]) if active else 0.0,
+            "active_mean": float(sum(active)) / len(active) if active else 0.0,
             **self.request_stats(),
         }
+        if self.pool.paged:
+            out.update(
+                pool_blocks_total=float(self.pool.total_blocks - 1),
+                peak_blocks_used=float(self.peak_blocks_used),
+                blocks_written=float(self.blocks_written),
+            )
+        return out
 
     # -- one-shot batch API (launch.serve.generate rides this) -------------
 

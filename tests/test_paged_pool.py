@@ -1,0 +1,571 @@
+"""Paged KV slot pool (block-granular cache + block-table flash decode):
+
+* paged kernel (interpret) vs the paged jnp ref — bit-level agreement
+  (same arithmetic, two lowered programs) across GQA group sizes,
+  bf16/int8 pools, and valid lengths straddling the block boundary;
+* paged vs CONTIGUOUS flash decode — gathering a request's blocks into a
+  contiguous cache and running the PR-5 ref must match the paged walk at
+  float-ulp level, for any physical block permutation (the walk order is
+  logical, so the outputs are permutation-invariant bit-for-bit);
+* ``ContinuousEngine(PoolConfig(paged=True))``: greedy outputs
+  token-identical to ``generate_reference`` under iid + GE links and int8
+  pools, rotating windows wrapping across block boundaries included, with
+  the AOT compile count pinned at ``num_buckets + 1`` under the
+  ``no_recompile`` guard;
+* host allocator edges — pool exhaustion blocks head-of-line without
+  corrupting live slots, freed blocks are reallocated without stale-row
+  leakage, never-admissible requests are rejected at submit;
+* satellites — ``write_slot``/``write_prompt_blocks`` raise on dtype
+  mismatch instead of silently casting, ``decode_read_bytes(paged=...)``
+  and its traced twin agree exactly, admission bytes scale with the
+  bucket, and the paged-pool obs gauges/counters match an eager oracle.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.analysis.guards import no_recompile
+from repro.configs import ARCHITECTURES
+from repro.kernels.decode_attention import (
+    flash_decode_ref,
+    paged_decode_attention,
+    paged_flash_decode_kernel,
+    paged_flash_decode_ref,
+)
+from repro.launch.serve import generate_reference
+from repro.models import cache as cache_lib, lm
+from repro.serve import ContinuousEngine, PoolConfig
+
+BS = 8          # pool block size used by the kernel-level tests
+
+
+def _make_paged(seed, b, n_blocks, bs, kvh, g, hd, quantized,
+                dtype=jnp.float32):
+    """Random query + block pool + a shuffled (never-0) block table."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, 1, kvh, g, hd), dtype)
+    if quantized:
+        pool = {
+            "k": jax.random.randint(
+                ks[1], (n_blocks, bs, kvh, hd), -127, 128, jnp.int8
+            ),
+            "v": jax.random.randint(
+                ks[2], (n_blocks, bs, kvh, hd), -127, 128, jnp.int8
+            ),
+            "k_scale": (jax.random.uniform(ks[3], (n_blocks, bs, kvh)) * 0.05
+                        + 0.01).astype(jnp.bfloat16),
+            "v_scale": (jax.random.uniform(ks[4], (n_blocks, bs, kvh)) * 0.05
+                        + 0.01).astype(jnp.bfloat16),
+        }
+    else:
+        pool = {
+            "k": jax.random.normal(ks[1], (n_blocks, bs, kvh, hd), dtype),
+            "v": jax.random.normal(ks[2], (n_blocks, bs, kvh, hd), dtype),
+        }
+    return q, pool
+
+
+def _shuffled_table(seed, b, j, n_blocks):
+    """(b, j) table of distinct physical ids drawn from 1..n_blocks-1."""
+    rng = np.random.RandomState(seed)
+    ids = rng.permutation(np.arange(1, n_blocks))[: b * j]
+    return jnp.asarray(ids.reshape(b, j), jnp.int32)
+
+
+def _gathered(pool, bt):
+    """A request-major contiguous cache holding the table's rows —
+    the input the PR-5 contiguous ref expects."""
+    out = {}
+    for name, leaf in pool.items():
+        g = jnp.take(leaf, bt.reshape(-1), axis=0)           # (b*j, bs, ...)
+        b, j = bt.shape
+        out[name] = g.reshape((b, j * leaf.shape[1]) + leaf.shape[2:])
+    return out
+
+
+class TestPagedKernelRefEquivalence:
+    @pytest.mark.parametrize("g", [1, 4])
+    @pytest.mark.parametrize("quantized", [False, True])
+    @pytest.mark.parametrize("n_valid", [1, BS - 1, BS, 4 * BS])
+    def test_kernel_interpret_equals_ref(self, g, quantized, n_valid):
+        b, j, kvh, hd = 2, 4, 2, 16
+        q, pool = _make_paged(0, b, 16, BS, kvh, g, hd, quantized)
+        bt = _shuffled_table(0, b, j, 16)
+        n = jnp.full((b,), n_valid, jnp.int32)
+        args = (q[:, 0], pool["k"], pool["v"],
+                pool.get("k_scale"), pool.get("v_scale"), bt, n)
+        out_k = paged_flash_decode_kernel(*args, block_size=BS,
+                                          interpret=True)
+        out_r = paged_flash_decode_ref(*args, block_size=BS)
+        np.testing.assert_allclose(
+            np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+            rtol=2e-6, atol=2e-6,
+        )
+
+    @pytest.mark.parametrize("softcap", [0.0, 30.0])
+    def test_softcap_paths_agree(self, softcap):
+        b, j, kvh, g, hd = 1, 2, 2, 2, 8
+        q, pool = _make_paged(1, b, 8, BS, kvh, g, hd, False)
+        bt = _shuffled_table(1, b, j, 8)
+        n = jnp.full((b,), 11, jnp.int32)
+        args = (q[:, 0], pool["k"], pool["v"], None, None, bt, n)
+        out_k = paged_flash_decode_kernel(*args, block_size=BS,
+                                          softcap=softcap, interpret=True)
+        out_r = paged_flash_decode_ref(*args, block_size=BS, softcap=softcap)
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_r), rtol=2e-6, atol=2e-6
+        )
+
+    def test_bf16_query_int8_pool(self):
+        """Production serve dtype: bf16 activations over the int8 pool."""
+        b, j, kvh, g, hd = 2, 4, 2, 4, 16
+        q, pool = _make_paged(4, b, 16, BS, kvh, g, hd, True,
+                              dtype=jnp.bfloat16)
+        bt = _shuffled_table(4, b, j, 16)
+        n = jnp.full((b,), 13, jnp.int32)
+        args = (q[:, 0], pool["k"], pool["v"],
+                pool["k_scale"], pool["v_scale"], bt, n)
+        out_k = paged_flash_decode_kernel(*args, block_size=BS,
+                                          interpret=True)
+        out_r = paged_flash_decode_ref(*args, block_size=BS)
+        assert out_k.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+            rtol=1e-2,
+        )
+
+
+class TestPagedVsContiguous:
+    @pytest.mark.parametrize("g", [1, 4])
+    @pytest.mark.parametrize("quantized", [False, True])
+    @pytest.mark.parametrize("n_valid", [1, BS - 1, BS, 4 * BS])
+    def test_matches_contiguous_ref_on_gathered_cache(
+        self, g, quantized, n_valid
+    ):
+        """Acceptance grid: the paged walk over shuffled physical blocks
+        equals the PR-5 contiguous flash decode on the gathered cache —
+        same online-softmax recipe, so agreement is float-ulp level."""
+        b, j, kvh, hd = 2, 4, 2, 16
+        q, pool = _make_paged(7, b, 16, BS, kvh, g, hd, quantized)
+        bt = _shuffled_table(7, b, j, 16)
+        n = jnp.full((b,), n_valid, jnp.int32)
+        out_p = paged_flash_decode_ref(
+            q[:, 0], pool["k"], pool["v"],
+            pool.get("k_scale"), pool.get("v_scale"), bt, n, block_size=BS,
+        )
+        cache = _gathered(pool, bt)
+        out_c = flash_decode_ref(
+            q[:, 0], cache["k"], cache["v"],
+            cache.get("k_scale"), cache.get("v_scale"),
+            n[:, None], block_kv=BS,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_p, np.float32), np.asarray(out_c, np.float32),
+            rtol=2e-6, atol=2e-6,
+        )
+
+    def test_physical_permutation_invariance(self):
+        """Two pools holding the same logical rows under different physical
+        placements produce bitwise-identical outputs: the walk follows the
+        table in logical order, so physical ids never affect arithmetic."""
+        b, j, kvh, g, hd = 2, 4, 2, 2, 16
+        q, pool = _make_paged(9, b, 16, BS, kvh, g, hd, True)
+        bt1 = _shuffled_table(1, b, j, 16)
+        bt2 = _shuffled_table(2, b, j, 16)
+        # Re-scatter pool-1's logical rows into bt2's physical placement.
+        pool2 = {
+            name: jnp.zeros_like(leaf).at[bt2.reshape(-1)].set(
+                jnp.take(leaf, bt1.reshape(-1), axis=0)
+            )
+            for name, leaf in pool.items()
+        }
+        n = jnp.array([5, 3 * BS + 2], jnp.int32)
+        a = (q[:, 0], pool["k"], pool["v"], pool["k_scale"],
+             pool["v_scale"], bt1, n)
+        b_ = (q[:, 0], pool2["k"], pool2["v"], pool2["k_scale"],
+              pool2["v_scale"], bt2, n)
+        for fn, kw in (
+            (paged_flash_decode_ref, {}),
+            (paged_flash_decode_kernel, {"interpret": True}),
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(fn(*a, block_size=BS, **kw), np.float32),
+                np.asarray(fn(*b_, block_size=BS, **kw), np.float32),
+            )
+
+    @pytest.mark.parametrize("impl", ["ref", "kernel"])
+    def test_ops_windowed_layer_slices_table(self, impl):
+        """``paged_decode_attention(seq_len=...)`` walks only the layer's
+        own ``ceil(seq_len / block_size)`` table entries: garbage ids in
+        the tail of a wider table row must not affect the output."""
+        b, j, kvh, g, hd = 2, 4, 2, 2, 16
+        q, pool = _make_paged(11, b, 16, BS, kvh, g, hd, False)
+        bt = _shuffled_table(11, b, j, 16)
+        seq_len = BS + 3                       # c_l of a window=11 layer
+        for n_valid in (1, BS, seq_len):
+            n = jnp.full((b,), n_valid, jnp.int32)
+            out = paged_decode_attention(
+                q, pool, bt, n, seq_len=seq_len, block_size=BS, impl=impl,
+                interpret=True,
+            )
+            cache = _gathered(pool, bt[:, :2])
+            want = flash_decode_ref(
+                q[:, 0], cache["k"], cache["v"], None, None, n[:, None],
+                block_kv=BS,
+            )
+            np.testing.assert_allclose(
+                np.asarray(out[:, 0], np.float32),
+                np.asarray(want, np.float32), rtol=2e-6, atol=2e-6,
+                err_msg=f"n_valid={n_valid}",
+            )
+
+
+def _setup_engine(channel="iid", loss_rate=0.3, **overrides):
+    cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(
+        attn_impl="flash_decode", **overrides
+    )
+    cfg = cfg.with_updates(
+        link=dataclasses.replace(cfg.link, loss_rate=loss_rate, channel=channel)
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt(i, length, vocab):
+    return np.asarray(
+        jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(7), i), (length,), 0, vocab,
+            jnp.int32,
+        )
+    )
+
+
+def _check_identity(eng, params, cfg, lengths, tokens, key):
+    reqs = [
+        eng.submit(_prompt(i, L, cfg.vocab_size), tokens,
+                   key=jax.random.fold_in(key, i))
+        for i, L in enumerate(lengths)
+    ]
+    eng.run(params)
+    for i, (L, req) in enumerate(zip(lengths, reqs)):
+        ref, _ = generate_reference(
+            params, cfg, jnp.asarray(_prompt(i, L, cfg.vocab_size))[None],
+            tokens, key=jax.random.fold_in(key, i),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref)[0], req.tokens, err_msg=f"request {i} (len {L})"
+        )
+    return reqs
+
+
+class TestPagedEngine:
+    @pytest.mark.parametrize("channel", ["iid", "ge"])
+    def test_token_identity_vs_reference(self, channel):
+        """Acceptance: the paged engine's greedy outputs are token-for-token
+        identical to the per-request reference loop, mixed buckets, with the
+        block pool shared across slots."""
+        cfg, params = _setup_engine(channel=channel)
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=4, max_new=4, max_prompt=16, min_bucket=4,
+                       paged=True, block_size=4),
+        )
+        _check_identity(eng, params, cfg, [1, 3, 6, 13], 4,
+                        jax.random.PRNGKey(42))
+
+    def test_int8_pool_token_identity(self):
+        cfg, params = _setup_engine(kv_cache_dtype="int8")
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=2, max_new=5, max_prompt=8, min_bucket=8,
+                       paged=True, block_size=8),
+        )
+        _check_identity(eng, params, cfg, [4, 5, 6], 5, jax.random.PRNGKey(9))
+
+    def test_rotating_window_wraps_across_block_boundary(self):
+        """Sliding windows shorter than a block multiple: the per-layer
+        rotating write (row = length % c_l) must wrap mid-block and across
+        the block boundary without touching other slots' blocks.  window=6
+        with block_size=4 puts the wrap at row 2 of the second block."""
+        cfg = ARCHITECTURES["gemma3-12b"].reduced(attn_impl="flash_decode")
+        pat = tuple(dataclasses.replace(s, window=6) if s.window else s
+                    for s in cfg.unit_pattern)
+        cfg = cfg.with_updates(unit_pattern=pat)
+        cfg = cfg.with_updates(
+            link=dataclasses.replace(cfg.link, loss_rate=0.3, channel="iid")
+        )
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=2, max_new=8, max_prompt=8, min_bucket=4,
+                       paged=True, block_size=4),
+        )
+        # length reaches 11 > 6: every windowed layer wraps.
+        _check_identity(eng, params, cfg, [3, 5], 8, jax.random.PRNGKey(3))
+
+    def test_compiles_buckets_plus_one_and_no_recompile(self):
+        """Compile discipline: warm compiles == num_buckets + 1, and a
+        saturated follow-up workload (admissions, retirements, block
+        realloc) performs ZERO new XLA builds under the runtime guard."""
+        cfg, params = _setup_engine()
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=3, max_new=4, max_prompt=16, min_bucket=8,
+                       paged=True, block_size=4),
+        )
+        key = jax.random.PRNGKey(0)
+        for i, L in enumerate([5, 12, 7, 16]):        # buckets {8, 16}
+            eng.submit(_prompt(i, L, cfg.vocab_size), 3,
+                       key=jax.random.fold_in(key, i))
+        eng.run(params)
+        assert eng.num_buckets == 2
+        assert eng.compiles == eng.num_buckets + 1
+        # Precompute prompts/keys before arming the guard: host-side
+        # randint dispatches must not count as engine work.
+        work = [
+            (_prompt(100 + i, 4 + (i % 13), cfg.vocab_size), 1 + (i % 4),
+             jax.random.fold_in(key, 100 + i))
+            for i in range(8)
+        ]
+        with no_recompile(engines=(eng,)):
+            for p, t, k in work:
+                eng.submit(p, t, key=k)
+            done = eng.run(params)
+        assert len(done) == 8
+        assert eng.compiles == eng.num_buckets + 1
+
+
+class TestAllocatorEdges:
+    def _tight_engine(self, num_blocks=3):
+        """max_seq=12, block_size=4 -> 3 blocks/slot; num_blocks=3 gives 2
+        allocatable blocks — exactly one (prompt<=4, tokens<=4) request."""
+        cfg, params = _setup_engine()
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=2, max_new=4, max_prompt=8, min_bucket=8,
+                       paged=True, block_size=4, num_blocks=num_blocks),
+        )
+        return cfg, params, eng
+
+    def test_exhaustion_blocks_head_of_line_without_corruption(self):
+        """Pool of 2 allocatable blocks, three 2-block requests: admissions
+        serialize (a free slot alone is not enough), no live slot ever
+        loses a block, and every request still matches the reference."""
+        cfg, params, eng = self._tight_engine()
+        _check_identity(eng, params, cfg, [2, 3, 4], 4, jax.random.PRNGKey(5))
+        assert eng.stats()["active_peak"] == 1.0       # never co-resident
+        assert eng.peak_blocks_used == 2
+        # Head-of-line wait is bounded: everything completed and the full
+        # free list is restored (no leaked blocks).
+        assert sorted(eng._free_blocks) == [1, 2]
+        assert all(not b for b in eng._slot_blocks)
+
+    def test_free_then_realloc_no_stale_leakage(self):
+        """Freed blocks are reused (LIFO) by later requests whose valid
+        region is SHORTER than the previous tenant's — stale rows beyond
+        n_valid must stay invisible.  Token identity against the reference
+        is the oracle: any leaked row would change the softmax."""
+        cfg, params, eng = self._tight_engine()
+        key = jax.random.PRNGKey(17)
+        # Long tenant first (fills both blocks to row 8), then a 1-token
+        # prompt whose n_valid stays far below the stale rows.
+        r_long = eng.submit(_prompt(0, 4, cfg.vocab_size), 4,
+                            key=jax.random.fold_in(key, 0))
+        eng.run(params)
+        r_short = eng.submit(_prompt(1, 1, cfg.vocab_size), 2,
+                             key=jax.random.fold_in(key, 1))
+        eng.run(params)
+        for i, (req, L, t) in enumerate(
+            [(r_long, 4, 4), (r_short, 1, 2)]
+        ):
+            ref, _ = generate_reference(
+                params, cfg, jnp.asarray(_prompt(i, L, cfg.vocab_size))[None],
+                t, key=jax.random.fold_in(key, i),
+            )
+            np.testing.assert_array_equal(np.asarray(ref)[0], req.tokens)
+
+    def test_never_admissible_request_rejected_at_submit(self):
+        # 8-token prompt + 4 tokens needs 3 blocks > 2 allocatable.
+        cfg, params, eng = self._tight_engine()
+        with pytest.raises(ValueError, match="could never be admitted"):
+            eng.submit(_prompt(0, 8, cfg.vocab_size), 4)
+
+    def test_paged_rejects_recurrent_stacks(self):
+        cfg = ARCHITECTURES["xlstm-350m"].reduced()
+        with pytest.raises(ValueError, match="attention-only"):
+            ContinuousEngine(cfg, PoolConfig(paged=True))
+
+    def test_pool_needs_two_blocks(self):
+        cfg, _ = _setup_engine()
+        with pytest.raises(ValueError, match=">= 2 blocks"):
+            ContinuousEngine(
+                cfg, PoolConfig(paged=True, num_blocks=1)
+            )
+
+
+class TestWriteDtypeGuard:
+    @staticmethod
+    def _bf16_cache(cfg):
+        """Same tree STRUCTURE as the int8 cache, bf16 leaves — the shape a
+        miscalibrated producer hands the pool (structure mismatches are
+        caught by tree_map itself; the dtype guard covers this case)."""
+        return jax.tree_util.tree_map(
+            lambda a: a.astype(jnp.bfloat16), cache_lib.init_cache(cfg, 1, 16)
+        )
+
+    def test_write_slot_rejects_dtype_mismatch(self):
+        """Satellite regression: writing a bf16 cache into an int8 slot
+        pool must raise at trace time, not silently cast values to codes."""
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(kv_cache_dtype="int8")
+        pool = cache_lib.init_slot_pool(cfg, 2, 16)
+        with pytest.raises(ValueError, match="does not match pool leaf dtype"):
+            cache_lib.write_slot(pool, self._bf16_cache(cfg), jnp.int32(0))
+
+    def test_write_prompt_blocks_rejects_dtype_mismatch(self):
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(kv_cache_dtype="int8")
+        pool = cache_lib.init_block_pool(cfg, 8, 4)
+        bt = jnp.arange(1, 5, dtype=jnp.int32)
+        with pytest.raises(ValueError, match="does not match pool leaf dtype"):
+            cache_lib.write_prompt_blocks(pool, self._bf16_cache(cfg), bt, 2, 4)
+
+    def test_write_slot_same_config_still_works(self):
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(kv_cache_dtype="int8")
+        pool = cache_lib.init_slot_pool(cfg, 2, 16)
+        out = cache_lib.write_slot(
+            pool, cache_lib.init_cache(cfg, 1, 16), jnp.int32(1)
+        )
+        assert jax.tree_util.tree_structure(out) == \
+            jax.tree_util.tree_structure(pool)
+
+
+class TestByteAccounting:
+    @pytest.mark.parametrize("kv_cache_dtype", ["", "int8"])
+    def test_paged_int_vs_jnp_exact(self, kv_cache_dtype):
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(
+            kv_cache_dtype=kv_cache_dtype
+        )
+        for valid in (1, 3, 4, 7, 16, 33, 64):
+            want = cache_lib.decode_read_bytes(
+                cfg, 64, valid, paged=True, block_size=4
+            )
+            got = cache_lib.decode_read_bytes_jnp(
+                cfg, 64, jnp.float32(valid), paged=True, block_size=4
+            )
+            assert float(got) == float(want), valid
+
+    def test_paged_read_scales_with_valid_not_max_seq(self):
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].with_updates(kv_cache_dtype="int8")
+        small = cache_lib.decode_read_bytes(
+            cfg, 1024, 16, paged=True, block_size=16
+        )
+        full = cache_lib.decode_read_bytes(
+            cfg, 1024, 1024, paged=True, block_size=16
+        )
+        assert small * 8 <= full
+
+    def test_admission_bytes_scale_with_bucket(self):
+        """Acceptance: admission writes scale with the prompt's bucket, not
+        ``max_seq`` — the contiguous path is constant at the full slot."""
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(kv_cache_dtype="int8")
+        max_seq = 96
+        contiguous = cache_lib.admission_write_bytes(cfg, max_seq, 8)
+        assert contiguous == cache_lib.cache_bytes(cfg, 1, max_seq)
+        assert contiguous == cache_lib.admission_write_bytes(cfg, max_seq, 64)
+        b8 = cache_lib.admission_write_bytes(
+            cfg, max_seq, 8, paged=True, block_size=8
+        )
+        b64 = cache_lib.admission_write_bytes(
+            cfg, max_seq, 64, paged=True, block_size=8
+        )
+        assert b8 * 8 == b64                      # linear in the bucket
+        assert b64 < contiguous
+
+    def test_block_pool_bytes_matches_contiguous_at_parity(self):
+        """A derived (num_blocks=0) pool costs the contiguous pool's bytes
+        plus exactly one trash block + padded-tail rows per layer."""
+        cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(kv_cache_dtype="int8")
+        p = PoolConfig(max_slots=4, max_new=8, max_prompt=8, min_bucket=8,
+                       paged=True, block_size=4)
+        paged = cache_lib.block_pool_bytes(cfg, p.total_blocks, p.block_size)
+        contig = cache_lib.cache_bytes(cfg, p.max_slots, p.max_seq)
+        # max_seq=16 divides block_size=4, so the only overhead is block 0.
+        one_block = cache_lib.block_pool_bytes(cfg, 3, p.block_size) - \
+            cache_lib.block_pool_bytes(cfg, 2, p.block_size)
+        assert paged == contig + one_block
+
+
+@pytest.fixture
+def global_registry_enabled():
+    """Enable the process-global registry for one test, restore after."""
+    reg = obs.registry()
+    was = reg.enabled
+    reg.reset()
+    reg.enable()
+    yield reg
+    reg.reset()
+    reg.enabled = was
+
+
+class TestPagedObs:
+    def test_pool_gauges_and_blocks_written_vs_oracle(
+        self, global_registry_enabled
+    ):
+        """The paged-pool gauges/counters published at admission/retirement
+        sync points match an eager host oracle replaying the allocator
+        arithmetic, and obs-on keeps compiles == num_buckets + 1."""
+        reg = global_registry_enabled
+        cfg, params = _setup_engine()
+        pool = PoolConfig(max_slots=4, max_new=4, max_prompt=16, min_bucket=4,
+                          paged=True, block_size=4)
+        eng = ContinuousEngine(cfg, pool)
+        key = jax.random.PRNGKey(21)
+        lengths = [1, 3, 6, 13]
+        for i, L in enumerate(lengths):
+            eng.submit(_prompt(i, L, cfg.vocab_size), 4,
+                       key=jax.random.fold_in(key, i))
+        # One scheduler tick: all four admissions land, nothing retires.
+        eng.step(params)
+        oracle_used = sum(
+            eng._blocks_needed(L, 4) for L in lengths
+        )
+        assert reg.gauge("serve.pool_blocks_used").value == float(oracle_used)
+        assert reg.gauge("serve.pool_blocks_total").value == float(
+            pool.total_blocks - 1
+        )
+        # Fresh admissions: bucket-padded reservations hold more rows than
+        # the prompts fill, so fragmentation is strictly positive.
+        assert 0.0 < reg.gauge("serve.pool_fragmentation").value < 1.0
+        eng.run(params)
+        # Drained: every block back on the free list, fragmentation zero.
+        assert reg.gauge("serve.pool_blocks_used").value == 0.0
+        assert reg.gauge("serve.pool_fragmentation").value == 0.0
+        oracle_written = sum(
+            min(cache_lib.blocks_for(eng.bucket_for(L), pool.block_size),
+                pool.blocks_per_slot)
+            for L in lengths
+        )
+        assert reg.counter("serve.blocks_written").value == float(
+            oracle_written
+        )
+        assert eng.blocks_written == oracle_written
+        assert eng.compiles == eng.num_buckets + 1
+
+    def test_stats_surface_pool_fields(self):
+        cfg, params = _setup_engine()
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=2, max_new=4, max_prompt=8, min_bucket=8,
+                       paged=True, block_size=4),
+        )
+        eng.submit(_prompt(0, 4, cfg.vocab_size), 2)
+        eng.run(params)
+        s = eng.stats()
+        assert s["pool_blocks_total"] == float(eng.pool.total_blocks - 1)
+        assert s["peak_blocks_used"] >= 1.0
+        assert s["blocks_written"] >= 1.0
+        assert s["active_peak"] >= 1.0
