@@ -35,12 +35,29 @@ token-for-token between the two engines, and both keep
 
     PYTHONPATH=src python -m benchmarks.serving_bench --paged \
         [--assert-min-sustained-ratio 2.0] [--out BENCH_serving_paged.json]
+
+``--sla`` is the SLA/chaos headline: a mixed-class Poisson workload
+(interactive / standard / batch priorities with per-class deadlines) in
+**virtual time** (a ``VirtualClock`` advanced a fixed ``dt`` per engine
+step, so deadline hit-rates are deterministic and CI-gateable), with a
+mid-run ``channel_collapse`` killing uplinks and a ``block_pool_squeeze``
+starving the paged pool — run twice through the SAME engine shape, once
+FIFO (no scheduler) and once under ``SLAScheduler`` (EDF-within-priority,
+preemption, expiry, bounded retry).  Emits ``BENCH_serving_sla.json``
+with per-class p50/p99 and deadline-hit-rate for both arms; the CI gate
+asserts every submitted request resolves terminally and the scheduled
+high-priority hit-rate beats the unscheduled one.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --sla \
+        [--assert-all-terminal] [--assert-min-hi-hit-rate 0.6] \
+        [--assert-scheduled-beats-unscheduled] [--out BENCH_serving_sla.json]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -50,10 +67,28 @@ import numpy as np
 from repro import obs
 from repro.analysis.guards import no_recompile
 from repro.configs import ARCHITECTURES, get_config
+from repro.core import link as link_lib
 from repro.models import cache as cache_lib, lm
+from repro.net.chaos import (
+    ChaosSchedule,
+    EngineChaos,
+    _OverrideChannel,
+    block_pool_squeeze,
+    channel_collapse,
+)
+from repro.net.channels import make_channel
+from repro.net.protocol import make_protocol
 from repro.obs import exporters
 from repro.obs.stats import latency_summary
-from repro.serve import ContinuousEngine, DecodeEngine, PoolConfig
+from repro.serve import (
+    SLA,
+    ContinuousEngine,
+    DecodeEngine,
+    PoolConfig,
+    PoolExhausted,
+    SLAScheduler,
+    VirtualClock,
+)
 
 logger = obs.get_logger("serving_bench")
 
@@ -355,6 +390,267 @@ def run_paged_bench(
     }
 
 
+# ---------------------------------------------------------------------------
+# --sla mode: mixed-SLA chaos workload, scheduled vs FIFO, in virtual time
+# ---------------------------------------------------------------------------
+
+# Class mix cycles i % 3 → interactive / standard / batch.  Deadlines are
+# VIRTUAL seconds (the driver advances the clock dt_step per engine step,
+# so "one decode step" is the time unit scaled by dt_step — deterministic
+# on any machine) expressed as multiples of the nominal unqueued service
+# time ((tokens + 1 steps) * dt_step): 2x for interactive (meetable only
+# with immediate admission), 5x for standard, best-effort for batch.
+_SLA_CLASS_NAMES = ("interactive", "standard", "batch")
+
+
+def sla_classes(tokens: int, dt_step: float):
+    service_s = (tokens + 1) * dt_step
+    return (
+        ("interactive", 2, 2.0 * service_s),
+        ("standard", 1, 5.0 * service_s),
+        ("batch", 0, math.inf),
+    )
+
+
+def build_sla_workload(
+    n_requests: int,
+    span_s: float,
+    chaos: ChaosSchedule,
+    vocab: int,
+    classes,
+    seed: int = 0,
+    n_packets: int = 12,
+):
+    """Poisson arrivals in virtual time, each crossing a lossy ARQ uplink
+    BEFORE reaching the engine.  A ``channel_collapse`` window overrides
+    the uplink loss (the real channel's burst state is not advanced —
+    same semantics as ``net.simulator``): requests arriving inside a
+    total collapse exhaust the ARQ budget and are dropped at the uplink,
+    never submitted.  Returns per-request dicts shared by both arms."""
+    rng = np.random.RandomState(seed)
+    rate = n_requests / span_s
+    t, arrivals = 0.0, []
+    while len(arrivals) < n_requests:
+        t += rng.exponential(1.0 / rate)
+        arrivals.append(t)
+    protocol = make_protocol("arq", max_rounds=4)
+    channel = make_channel("ge", loss_rate=0.1)
+    ch_state = channel.init_state(rng)
+    slot_t = link_lib.ChannelConfig().slot_time_s()
+    items = []
+    for i, t in enumerate(arrivals):
+        name, pri, deadline = classes[i % len(classes)]
+        override = chaos.loss_override(t)
+        if override is None:
+            result, ch_state = protocol.run_round(
+                rng, channel, ch_state, n_packets
+            )
+        else:
+            result, _ = protocol.run_round(
+                rng, _OverrideChannel(override), None, n_packets
+            )
+        length = int(4 + i % 4)          # one power-of-two bucket (8)
+        items.append({
+            "idx": i,
+            "cls": name,
+            "sla": SLA(deadline_s=deadline, priority=pri, class_name=name),
+            "deadline_s": deadline,
+            "prompt": rng.randint(0, vocab, size=(length,)).astype(np.int32),
+            "vt": t + result.slots * slot_t,       # uplink latency shifts it
+            "dropped": result.delivered_fraction < 0.2,
+        })
+    return items
+
+
+def _drive_sla_arm(
+    cfg, params, pool: PoolConfig, items, chaos: ChaosSchedule,
+    tokens: int, dt_step: float, base_key, scheduled: bool,
+):
+    """One virtual-time replay: submit arrivals as the clock passes them,
+    one engine step + one ``dt_step`` advance per iteration, chaos applied
+    at each step's virtual now.  Returns (per-item bookkeeping, engine,
+    scheduler)."""
+    items = [dict(it) for it in sorted(items, key=lambda it: it["vt"])]
+    eng = ContinuousEngine(cfg, pool)
+    clock = VirtualClock()
+    sched = None
+    if scheduled:
+        sched = SLAScheduler(
+            clock=clock, backoff_s=dt_step, backoff_cap_s=4 * dt_step,
+            max_retries=256,
+        )
+        eng.attach_scheduler(sched)
+    # Warm every bucket + the decode step before the guarded replay (one
+    # request at a time: trivially admissible regardless of pool size).
+    for i, b in enumerate(sorted(
+            {eng.bucket_for(len(it["prompt"])) for it in items})):
+        p = next(it["prompt"] for it in items
+                 if eng.bucket_for(len(it["prompt"])) == b)
+        eng.submit(p, 1, key=jax.random.fold_in(base_key, 50_000 + i))
+        eng.run(params)
+    echaos = EngineChaos(eng, chaos)
+    i = 0
+    exhausted = 0
+    submitted = []
+    with no_recompile(engines=(eng,)):
+        for _ in range(200_000):
+            now = clock.now
+            echaos.apply(now)
+            while i < len(items) and items[i]["vt"] <= now:
+                it = items[i]
+                i += 1
+                if it["dropped"]:
+                    continue
+                it["req"] = eng.submit(
+                    it["prompt"], tokens,
+                    key=jax.random.fold_in(base_key, it["idx"]),
+                    sla=it["sla"] if scheduled else None,
+                )
+                submitted.append(it)
+            try:
+                eng.step(params)
+            except PoolExhausted:
+                # Unscheduled backpressure: nothing to shed here — the
+                # squeeze window eventually closes; count and carry on.
+                exhausted += 1
+            clock.advance(dt_step)
+            for it in submitted:
+                if "vt_done" not in it and it["req"].terminal:
+                    it["vt_done"] = clock.now
+            idle = not eng.active and not eng._queue and not (
+                sched is not None and sched.pending
+            )
+            if idle and i >= len(items):
+                break
+            if idle and items[i]["vt"] > clock.now:
+                clock.now = items[i]["vt"]       # idle skip-ahead
+        else:
+            raise RuntimeError("sla bench driver did not drain")
+    eng._harvest()
+    return items, eng, sched, exhausted
+
+
+def _sla_class_summary(items, tokens_deadline_from="vt"):
+    """Per-class served/completed/hit accounting from the driver's own
+    virtual-time bookkeeping (identical metric for both arms)."""
+    out = {}
+    for name in _SLA_CLASS_NAMES:
+        rows = [it for it in items if it["cls"] == name]
+        served = [it for it in rows if not it["dropped"]]
+        completed = [
+            it for it in served if it.get("req") is not None
+            and it["req"].state == "completed"
+        ]
+        hits = [
+            it for it in completed
+            if it["vt_done"] <= it["vt"] + it["deadline_s"]
+        ]
+        lat = sorted(it["vt_done"] - it["vt"] for it in completed)
+        out[name] = {
+            "submitted": len(rows),
+            "uplink_dropped": sum(it["dropped"] for it in rows),
+            "served": len(served),
+            "completed": len(completed),
+            "expired": sum(
+                it.get("req") is not None and it["req"].state == "expired"
+                for it in served
+            ),
+            "rejected": sum(
+                it.get("req") is not None and it["req"].state == "rejected"
+                for it in served
+            ),
+            "deadline_hit_rate": len(hits) / len(served) if served else 1.0,
+            "latency_p50_vs": lat[len(lat) // 2] if lat else None,
+            "latency_p99_vs": lat[min(len(lat) - 1,
+                                      int(0.99 * len(lat)))] if lat else None,
+        }
+    return out
+
+
+def run_sla_bench(
+    arch: str = "qwen1.5-0.5b",
+    n_requests: int = 30,
+    tokens: int = 6,
+    span_s: float = 20.0,
+    dt_step: float = 0.25,
+    seed: int = 0,
+    full_size: bool = False,
+) -> dict:
+    """Scheduled vs FIFO under chaos, same workload, same engine shape.
+
+    The pool is deliberately tight (2 slots, derived block pool) and the
+    offered load exceeds its service rate, so queueing is real; mid-run a
+    total channel collapse kills uplinks and a 60% block squeeze starves
+    the allocator.  FIFO head-of-line makes interactive requests wait
+    behind batch ones; the scheduler preempts/expires instead."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if not full_size:
+        cfg = cfg.reduced()
+    cfg = cfg.with_updates(
+        link=dataclasses.replace(cfg.link, loss_rate=0.1, channel="ge"),
+        attn_impl="flash_decode",
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    base_key = jax.random.PRNGKey(seed)
+    chaos = ChaosSchedule([
+        channel_collapse(0.40 * span_s, 0.60 * span_s, loss_rate=1.0),
+        block_pool_squeeze(0.30 * span_s, 0.70 * span_s, fraction=0.6),
+    ])
+    items = build_sla_workload(
+        n_requests, span_s, chaos, cfg.vocab_size,
+        sla_classes(tokens, dt_step), seed=seed,
+    )
+    pool = PoolConfig(
+        max_slots=2, max_new=max(8, tokens), max_prompt=8, min_bucket=8,
+        paged=True, block_size=4, exhaust_wait_steps=64,
+    )
+    arms = {}
+    for name, scheduled in (("unscheduled", False), ("scheduled", True)):
+        booked, eng, sched, exhausted = _drive_sla_arm(
+            cfg, params, pool, items, chaos, tokens, dt_step, base_key,
+            scheduled,
+        )
+        served = [it for it in booked if not it["dropped"]]
+        arms[name] = {
+            "classes": _sla_class_summary(booked),
+            "pool_exhausted_signals": exhausted,
+            "all_terminal": all(it["req"].terminal for it in served),
+            "compiles": eng.compiles,
+            "num_buckets": eng.num_buckets,
+            "preemptions": sched.stats["preemptions"] if sched else 0,
+            "resumes": sched.stats["resumes"] if sched else 0,
+            "expired": sched.stats["expired"] if sched else 0,
+            "rejected": sched.stats["rejected"] if sched else 0,
+            "scheduler_class_report": sched.class_report() if sched else None,
+        }
+        assert eng.compiles == eng.num_buckets + 1, (
+            name, eng.compiles, eng.num_buckets
+        )
+    hi = "interactive"
+    return {
+        "bench": "serving_sla",
+        "arch": arch,
+        "n_requests": n_requests,
+        "tokens": tokens,
+        "span_virtual_s": span_s,
+        "dt_step_virtual_s": dt_step,
+        "backend": jax.default_backend(),
+        "chaos": [dataclasses.asdict(f) for f in chaos.faults],
+        "uplink_dropped": sum(it["dropped"] for it in items),
+        "unscheduled": arms["unscheduled"],
+        "scheduled": arms["scheduled"],
+        "hi_class": hi,
+        "hi_hit_rate_unscheduled":
+            arms["unscheduled"]["classes"][hi]["deadline_hit_rate"],
+        "hi_hit_rate_scheduled":
+            arms["scheduled"]["classes"][hi]["deadline_hit_rate"],
+        "all_terminal": (arms["unscheduled"]["all_terminal"]
+                         and arms["scheduled"]["all_terminal"]),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=sorted(ARCHITECTURES))
@@ -380,6 +676,31 @@ def main():
         "--assert-min-sustained-ratio", type=float, default=None,
         help="[--paged] fail unless paged sustains >= RATIO x the "
              "contiguous engine's median in-flight requests",
+    )
+    ap.add_argument(
+        "--sla", action="store_true",
+        help="SLA/chaos mode: mixed-class virtual-time workload with a "
+             "mid-run channel collapse + block squeeze, scheduled vs FIFO "
+             "(writes BENCH_serving_sla.json by default)",
+    )
+    ap.add_argument("--span", type=float, default=20.0,
+                    help="[--sla] virtual arrival span in seconds")
+    ap.add_argument("--dt-step", type=float, default=0.25,
+                    help="[--sla] virtual seconds per engine step")
+    ap.add_argument(
+        "--assert-all-terminal", action="store_true",
+        help="[--sla] fail unless every served request resolves as "
+             "completed|expired|rejected in BOTH arms",
+    )
+    ap.add_argument(
+        "--assert-min-hi-hit-rate", type=float, default=None,
+        help="[--sla] fail unless the scheduled arm's high-priority "
+             "deadline-hit-rate is >= this floor",
+    )
+    ap.add_argument(
+        "--assert-scheduled-beats-unscheduled", action="store_true",
+        help="[--sla] fail unless the scheduled high-priority hit-rate "
+             "strictly beats the unscheduled arm's",
     )
     ap.add_argument("--out", default=None)
     ap.add_argument("--assert-max-compiles", type=int, default=None,
@@ -407,8 +728,11 @@ def main():
     )
     args = ap.parse_args()
     if args.out is None:
-        args.out = "BENCH_serving_paged.json" if args.paged else \
-            "BENCH_serving.json"
+        args.out = (
+            "BENCH_serving_sla.json" if args.sla
+            else "BENCH_serving_paged.json" if args.paged
+            else "BENCH_serving.json"
+        )
 
     if args.obs_dir or args.assert_obs_span_chain:
         obs.enable()
@@ -416,6 +740,54 @@ def main():
         import os
 
         os.makedirs(args.obs_dir, exist_ok=True)
+
+    if args.sla:
+        result = run_sla_bench(
+            arch=args.arch,
+            n_requests=args.clients,
+            tokens=8 if args.smoke else args.tokens,
+            span_s=args.span,
+            dt_step=args.dt_step,
+            full_size=args.full_size,
+        )
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        sc, un = result["scheduled"], result["unscheduled"]
+        logger.info(
+            f"serving_bench --sla[{result['arch']} "
+            f"reqs={result['n_requests']}]: uplink dropped "
+            f"{result['uplink_dropped']} in collapse | "
+            f"{result['hi_class']} hit-rate FIFO "
+            f"{result['hi_hit_rate_unscheduled']:.2f} -> scheduled "
+            f"{result['hi_hit_rate_scheduled']:.2f} "
+            f"(preempt {sc['preemptions']}, resume {sc['resumes']}, "
+            f"expire {sc['expired']}, reject {sc['rejected']}; FIFO "
+            f"PoolExhausted x{un['pool_exhausted_signals']}) | compiles "
+            f"{un['compiles']}/{sc['compiles']} -> {args.out}"
+        )
+        ok = True
+        if args.assert_all_terminal and not result["all_terminal"]:
+            logger.error("ASSERT FAILED: some served requests never "
+                         "resolved terminally")
+            ok = False
+        if args.assert_min_hi_hit_rate is not None and \
+                result["hi_hit_rate_scheduled"] < args.assert_min_hi_hit_rate:
+            logger.error(
+                f"ASSERT FAILED: scheduled {result['hi_class']} hit-rate "
+                f"{result['hi_hit_rate_scheduled']:.2f} < "
+                f"{args.assert_min_hi_hit_rate}"
+            )
+            ok = False
+        if args.assert_scheduled_beats_unscheduled and not (
+                result["hi_hit_rate_scheduled"]
+                > result["hi_hit_rate_unscheduled"]):
+            logger.error(
+                f"ASSERT FAILED: scheduled hit-rate "
+                f"{result['hi_hit_rate_scheduled']:.2f} does not beat "
+                f"unscheduled {result['hi_hit_rate_unscheduled']:.2f}"
+            )
+            ok = False
+        raise SystemExit(0 if ok else 1)
 
     if args.paged:
         result = run_paged_bench(

@@ -1,4 +1,4 @@
-"""The six RPA rules: the repo's runtime invariants as static checks.
+"""The seven RPA rules: the repo's runtime invariants as static checks.
 
 | code   | invariant it guards                                               |
 |--------|-------------------------------------------------------------------|
@@ -17,6 +17,9 @@
 |        | the engines' steady-state step functions                          |
 | RPA006 | structured logging: no bare ``print(`` outside benchmarks/        |
 |        | examples/scripts (use ``repro.obs.get_logger``)                   |
+| RPA007 | host scheduler/chaos layer discipline: ``serve/scheduler.py`` and |
+|        | ``net/chaos.py`` stay on the engine's public host API — no jitted |
+|        | engine internals, no device syncs outside the sanctioned points   |
 
 Rules are heuristic by design: they encode this repo's conventions (which
 factories are sanctioned, which files are the kernel layer), favor few
@@ -576,7 +579,9 @@ _SYNC_CALLS = {
     "jax.device_get", "device_get",
 }
 _STEADY_STATE = {
-    "repro/serve/continuous.py": {"_decode_once", "_admit", "step"},
+    "repro/serve/continuous.py": {
+        "_decode_once", "_admit", "try_admit", "preempt_slot", "step",
+    },
     "repro/serve/engine.py": set(),
 }
 
@@ -677,6 +682,66 @@ def rule_hidden_host_sync(ctx: ModuleContext) -> None:
                 walk_defs(child, traced, factory)
 
     walk_defs(ctx.tree, False, False)
+
+
+# ---------------------------------------------------------------------------
+# RPA007 — host scheduler/chaos layer discipline
+# ---------------------------------------------------------------------------
+
+# The SLA scheduler and the chaos harness are pure HOST layers over the
+# continuous engine: they read host mirrors and drive admission through
+# the public API (try_admit / preempt_slot / running_slots / blocks_held /
+# free_block_count / blocks_needed).  The whole design depends on that:
+# a scheduler that touches jitted engine internals can silently add a
+# per-step host sync or an XLA build, breaking the zero-steady-state-
+# recompile and compile-count contracts without any test noticing until
+# the guard trips in CI.  This rule pins the boundary statically.
+_HOST_LAYER_FILES = ("repro/serve/scheduler.py", "repro/net/chaos.py")
+# Engine members that are (or lead to) compiled-program / device-state
+# machinery.  NOT listed: ``_free_blocks`` — the host-side block
+# allocator IS the chaos squeeze's sanctioned surface (documented in
+# net/chaos.py), and touching it moves no device bytes.
+_ENGINE_INTERNALS = {
+    "_state", "_decode_fn", "_prefill_fns", "_prefill_for", "_ensure",
+    "_decode_once", "_deaden_slot", "_aot", "_make_decode_step",
+    "_make_paged_decode_step", "_make_prefill",
+}
+
+
+@_rule("RPA007", "host scheduler/chaos layer reaching into jitted engine "
+                 "internals or forcing device syncs")
+def rule_host_layer_discipline(ctx: ModuleContext) -> None:
+    if not ctx.path.endswith(_HOST_LAYER_FILES):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and isinstance(
+                node.ctx, (ast.Load, ast.Store)) and \
+                node.attr in _ENGINE_INTERNALS:
+            ctx.emit(
+                node, "RPA007",
+                f"host scheduling layer touches engine internal "
+                f"{node.attr!r} — use the public host API (try_admit / "
+                "preempt_slot / running_slots / free_block_count / "
+                "blocks_needed); device work belongs in engine methods",
+            )
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted_name(node.func)
+        msg = None
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            msg = ".item() forces a device->host sync"
+        elif d in _SYNC_CALLS:
+            msg = f"{d}() materializes the value on host"
+        elif d and d.endswith("block_until_ready"):
+            msg = "block_until_ready blocks the host on device work"
+        if msg:
+            ctx.emit(
+                node, "RPA007",
+                f"{msg} in the host scheduling layer — scheduling decisions "
+                "must come from host mirrors; harvest device values at the "
+                "engine's sanctioned sync points only",
+            )
 
 
 # ---------------------------------------------------------------------------

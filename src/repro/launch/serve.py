@@ -214,6 +214,12 @@ def main():
         help="report link latency under this repro.net protocol policy",
     )
     ap.add_argument(
+        "--deadline", type=float, default=None,
+        help="report P(the protocol delivers the full uplink within this "
+        "many seconds) from the analytic completion PMFs — the same "
+        "deadline_feasible oracle the SLA scheduler sheds against",
+    )
+    ap.add_argument(
         "--attn-impl", default=None,
         choices=["naive", "blockwise", "flash_decode"],
         help="override cfg.attn_impl — blockwise/flash_decode decode via the "
@@ -265,6 +271,15 @@ def main():
     log.info(
         f"protocol={proto.name} E[link_latency_s]: {mean_lat:.5f} p99: {p99:.5f}"
     )
+    if args.deadline is not None:
+        from repro.net import deadline_feasible
+
+        p_meet = deadline_feasible(
+            proto, n_t, channel_cfg, args.deadline, loss_rate=p_eff
+        )
+        log.info(
+            f"P(uplink complete within {args.deadline:g}s): {p_meet:.4f}"
+        )
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ Layered like a thin protocol stack:
                core.link Eq. 4-5)
     simulator  event-driven multi-client serving simulation (Poisson
                arrivals, per-client channel state, server batching)
+    chaos      scheduled fault injection (channel collapse, server stall,
+               burst storm, block-pool squeeze) over simulator + engine
     traces     record / load / synthesize loss traces
 
 ``core.comtune.LinkSpec(channel=..., channel_params=...)`` selects a
@@ -47,12 +49,22 @@ from repro.net.evalhook import (  # noqa: F401
     make_request_eval_fn,
     train_tiny_model,
 )
+from repro.net.chaos import (  # noqa: F401
+    ChaosSchedule,
+    EngineChaos,
+    Fault,
+    block_pool_squeeze,
+    burst_storm,
+    channel_collapse,
+    server_stall,
+)
 from repro.net.protocol import (  # noqa: F401
     ARQProtocol,
     HybridFECARQProtocol,
     PROTOCOLS,
     RoundResult,
     UnreliableProtocol,
+    deadline_feasible,
     make_protocol,
 )
 from repro.net.simulator import (  # noqa: F401

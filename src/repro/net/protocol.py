@@ -85,6 +85,71 @@ def _binom_pmf(n: int, p_success: float) -> np.ndarray:
     return pmf / pmf.sum()
 
 
+def _clamped_loss(channel_cfg: link_lib.ChannelConfig,
+                  loss_rate: Optional[float]) -> float:
+    """Resolve and clamp the loss rate into [0, 1].
+
+    The PMF tail handling at the extremes is exact by construction
+    (``_binom_pmf`` branches at p<=0 / p>=1 instead of exponentiating
+    ``log(0)``), but callers feeding a chaos-ramped ``loss_rate`` can
+    overshoot 1.0 by float error — without the clamp that turns the DP
+    weights into NaN and feasibility into NaN instead of exactly 0."""
+    p = channel_cfg.loss_rate if loss_rate is None else float(loss_rate)
+    return min(max(p, 0.0), 1.0)
+
+
+def _retry_dp(
+    n_units: int,
+    slots_per_unit: int,
+    p_unit_fail: float,
+    max_rounds: int,
+    deadline_hit,
+) -> Tuple[dict, dict]:
+    """DP over (missing units, slots spent) shared by ARQ and FEC+ARQ.
+
+    One "unit" is a packet (ARQ) or an FEC block (``slots_per_unit`` = k+m
+    packet slots).  Returns ``(done_all, done_complete)``: terminal
+    probability mass by slot count over ALL terminal states, and over the
+    full-delivery (``missing == 0``) terminals only.  ``done_complete`` is
+    sub-normalized — its missing mass is the failure probability.
+    """
+    dist = {(n_units, 0): 1.0}
+    done_all: dict = {}
+    done_ok: dict = {}
+
+    def settle(miss: int, slots: int, prob: float) -> None:
+        done_all[slots] = done_all.get(slots, 0.0) + prob
+        if miss == 0:
+            done_ok[slots] = done_ok.get(slots, 0.0) + prob
+
+    for _ in range(max_rounds):
+        nxt: dict = {}
+        for (miss, slots), prob in dist.items():
+            if miss == 0 or deadline_hit(slots):
+                settle(miss, slots, prob)
+                continue
+            new_slots = slots + miss * slots_per_unit
+            pmf = _binom_pmf(miss, 1.0 - p_unit_fail)
+            for rec, pr in enumerate(pmf):
+                if pr < 1e-15:
+                    continue
+                key = (miss - rec, new_slots)
+                nxt[key] = nxt.get(key, 0.0) + prob * pr
+        dist = nxt
+        if not dist:
+            break
+    for (miss, slots), prob in dist.items():
+        settle(miss, slots, prob)
+    return done_all, done_ok
+
+
+def _dist_arrays(done: dict, slot_time_s: float
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    slots = np.array(sorted(done))
+    mass = np.array([done[s] for s in slots])
+    return slots * slot_time_s, mass
+
+
 class _ProtocolBase:
     name: str = "base"
 
@@ -92,6 +157,23 @@ class _ProtocolBase:
         self, n_packets: int, channel_cfg: link_lib.ChannelConfig,
         loss_rate: Optional[float] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def completion_latency_pmf(
+        self, n_packets: int, channel_cfg: link_lib.ChannelConfig,
+        loss_rate: Optional[float] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Joint (full delivery, latency) distribution.
+
+        Returns ``(lat_s, mass)`` where ``mass[i]`` is the probability that
+        the exchange delivers the COMPLETE message and finishes at latency
+        ``lat_s[i]`` — sub-normalized on purpose: ``mass.sum()`` is
+        P(complete delivery) and the missing probability is the failure
+        mass (deadline hit / retry budget exhausted with packets missing).
+        Keeping the joint form instead of conditioning on success is what
+        makes ``deadline_feasible`` exactly 0 (not 0/0 = NaN) when the
+        success mass vanishes at ``loss_rate=1.0``.
+        """
         raise NotImplementedError
 
     def expected_latency_s(
@@ -119,6 +201,13 @@ class UnreliableProtocol(_ProtocolBase):
     def latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
         lat = np.array([n_packets * channel_cfg.slot_time_s()])
         return lat, np.ones(1)
+
+    def completion_latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
+        p = _clamped_loss(channel_cfg, loss_rate)
+        lat = np.array([n_packets * channel_cfg.slot_time_s()])
+        # All n packets must survive the single shot; (1-p)^n is exactly 0
+        # at p=1 and exactly 1 at p=0.
+        return lat, np.array([(1.0 - p) ** n_packets])
 
     def expected_delivery_rate(self, n_packets: int, channel: Channel) -> float:
         return 1.0 - channel.stationary_loss_rate
@@ -161,32 +250,19 @@ class ARQProtocol(_ProtocolBase):
         accumulated = sum over rounds of (missing_j) slots; we track the
         joint distribution of (missing, slots spent).
         """
-        p = channel_cfg.loss_rate if loss_rate is None else loss_rate
-        T = channel_cfg.slot_time_s()
-        # dist: {(missing, slots): prob} entering the next round
-        dist = {(n_packets, 0): 1.0}
-        done: dict = {}
-        for _ in range(self.max_rounds):
-            nxt: dict = {}
-            for (miss, slots), prob in dist.items():
-                if miss == 0 or self._deadline_hit(slots):
-                    done[slots] = done.get(slots, 0.0) + prob
-                    continue
-                new_slots = slots + miss
-                pmf = _binom_pmf(miss, 1.0 - p)
-                for recv, pr in enumerate(pmf):
-                    if pr < 1e-15:
-                        continue
-                    key = (miss - recv, new_slots)
-                    nxt[key] = nxt.get(key, 0.0) + prob * pr
-            dist = nxt
-            if not dist:
-                break
-        for (miss, slots), prob in dist.items():
-            done[slots] = done.get(slots, 0.0) + prob
-        slots = np.array(sorted(done))
-        pmf = np.array([done[s] for s in slots])
-        return slots * T, pmf / pmf.sum()
+        p = _clamped_loss(channel_cfg, loss_rate)
+        done, _ = _retry_dp(
+            n_packets, 1, p, self.max_rounds, self._deadline_hit
+        )
+        lat, pmf = _dist_arrays(done, channel_cfg.slot_time_s())
+        return lat, pmf / pmf.sum()
+
+    def completion_latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
+        p = _clamped_loss(channel_cfg, loss_rate)
+        _, ok = _retry_dp(
+            n_packets, 1, p, self.max_rounds, self._deadline_hit
+        )
+        return _dist_arrays(ok, channel_cfg.slot_time_s())
 
     def expected_delivery_rate(self, n_packets: int, channel: Channel) -> float:
         """Per-packet delivery 1 - p^rounds, where the round count honors
@@ -243,34 +319,25 @@ class HybridFECARQProtocol(_ProtocolBase):
 
     def latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
         """DP over number of unrecovered blocks per round (stationary p)."""
-        p = channel_cfg.loss_rate if loss_rate is None else loss_rate
-        T = channel_cfg.slot_time_s()
-        n_blocks = self.fec.num_blocks(n_packets)
-        km = self.fec.block_packets
-        pfail = self._block_fail_prob(p)
-        dist = {(n_blocks, 0): 1.0}
-        done: dict = {}
-        for _ in range(self.max_rounds):
-            nxt: dict = {}
-            for (miss, slots), prob in dist.items():
-                if miss == 0:
-                    done[slots] = done.get(slots, 0.0) + prob
-                    continue
-                new_slots = slots + miss * km
-                pmf = _binom_pmf(miss, 1.0 - pfail)  # over recovered blocks
-                for rec, pr in enumerate(pmf):
-                    if pr < 1e-15:
-                        continue
-                    key = (miss - rec, new_slots)
-                    nxt[key] = nxt.get(key, 0.0) + prob * pr
-            dist = nxt
-            if not dist:
-                break
-        for (miss, slots), prob in dist.items():
-            done[slots] = done.get(slots, 0.0) + prob
-        slots = np.array(sorted(done))
-        pmf = np.array([done[s] for s in slots])
-        return slots * T, pmf / pmf.sum()
+        p = _clamped_loss(channel_cfg, loss_rate)
+        done, _ = _retry_dp(
+            self.fec.num_blocks(n_packets), self.fec.block_packets,
+            self._block_fail_prob(p), self.max_rounds, lambda s: False,
+        )
+        lat, pmf = _dist_arrays(done, channel_cfg.slot_time_s())
+        return lat, pmf / pmf.sum()
+
+    def completion_latency_pmf(self, n_packets, channel_cfg, loss_rate=None):
+        """Full delivery at the block-DP granularity: every block recovered
+        (>= k of its packets arrived in some round).  The rare partial
+        path — all k data packets of an unrecovered block arriving across
+        rounds — is ignored, consistent with ``latency_pmf``."""
+        p = _clamped_loss(channel_cfg, loss_rate)
+        _, ok = _retry_dp(
+            self.fec.num_blocks(n_packets), self.fec.block_packets,
+            self._block_fail_prob(p), self.max_rounds, lambda s: False,
+        )
+        return _dist_arrays(ok, channel_cfg.slot_time_s())
 
     def expected_delivery_rate(self, n_packets: int, channel: Channel) -> float:
         pfail = self._block_fail_prob(channel.stationary_loss_rate)
@@ -305,6 +372,44 @@ class HybridFECARQProtocol(_ProtocolBase):
             slots += todo.size * km
         delivered = data_keep.reshape(-1)[:n_packets]
         return RoundResult(delivered, slots, max(rounds, 1)), state
+
+
+# ---------------------------------------------------------------------------
+# Deadline feasibility
+# ---------------------------------------------------------------------------
+
+def deadline_feasible(
+    protocol: _ProtocolBase,
+    n_packets: int,
+    channel_cfg: link_lib.ChannelConfig,
+    deadline_s: float,
+    loss_rate: Optional[float] = None,
+) -> float:
+    """P(the protocol delivers the FULL message within ``deadline_s``).
+
+    Computed from the analytic completion PMFs, so it is the scheduler's
+    early-expiry oracle: a queued request whose remaining deadline budget
+    makes this (near) zero can be rejected before burning decode steps or
+    air time.  Independently useful for capacity planning.
+
+    Exactness at the extremes (regression-tested):
+
+    * ``loss_rate=0.0`` — every packet lands in round one, so any deadline
+      covering the first-shot latency gives exactly 1.0.
+    * ``loss_rate=1.0`` — the success mass is zero.  The naive estimator
+      P(lat <= d | complete) would divide 0/0 = NaN here; summing the
+      *joint* completion mass instead returns exactly 0.0.
+    """
+    if deadline_s < 0.0:
+        return 0.0
+    lat, mass = protocol.completion_latency_pmf(
+        n_packets, channel_cfg, loss_rate
+    )
+    if lat.size == 0:
+        return 0.0
+    # Tolerate float fuzz in slots * slot_time sums at the boundary.
+    total = float(mass[lat <= deadline_s * (1.0 + 1e-12) + 1e-15].sum())
+    return min(max(total, 0.0), 1.0)
 
 
 # ---------------------------------------------------------------------------

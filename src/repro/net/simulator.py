@@ -43,6 +43,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import heapq
+import inspect
 import itertools
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -53,6 +54,7 @@ from repro import obs
 from repro.core import link as link_lib
 from repro.obs.stats import latency_summary
 from repro.net.channels import Channel, IIDChannel
+from repro.net.chaos import ChaosSchedule, _OverrideChannel
 from repro.net.protocol import UnreliableProtocol, _ProtocolBase
 
 
@@ -116,6 +118,7 @@ def run_sim(
     model=None,
     request_eval_fn: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None,
     engine: Optional[Callable[[Sequence["_Request"]], float]] = None,
+    chaos: Optional[ChaosSchedule] = None,
 ) -> SimReport:
     """Run one simulation.
 
@@ -141,12 +144,30 @@ def run_sim(
     — real compute, plus real compile behavior the first time a batch hits
     a new prefill bucket — becomes the server busy time, so the reported
     p50/p99 include what the hardware actually did.  Composes with
-    ``model_in_the_loop=True`` (mask collection is unchanged).
+    ``model_in_the_loop=True`` (mask collection is unchanged).  An engine
+    callable accepting a ``now`` keyword receives the simulated batch
+    start time (``make_sim_server`` uses it to drive chaos block squeezes
+    and scheduler deadlines on the sim clock).
+
+    ``chaos`` injects scheduled faults (``repro.net.chaos``) into the
+    event flow: ``channel_collapse`` windows draw uplink masks from an
+    i.i.d. overlay at the override loss rate (the real channel's burst
+    state is NOT advanced — outage, not channel mutation), ``server_stall``
+    windows extend the busy time of batches started inside them, and
+    ``burst_storm`` windows multiply the Poisson arrival rate (explicit
+    ``arrivals`` schedules are taken as-is).
     """
     t_wall0 = time.perf_counter()
     rng = np.random.RandomState(cfg.seed)
     channel_cfg = channel_cfg or link_lib.ChannelConfig()
     protocol = protocol or UnreliableProtocol()
+    chaos = chaos if chaos else None          # empty schedule -> no-op path
+    engine_takes_now = False
+    if engine is not None:
+        try:
+            engine_takes_now = "now" in inspect.signature(engine).parameters
+        except (TypeError, ValueError):
+            pass
     if channels is None:
         channels = [IIDChannel(0.1) for _ in range(cfg.n_clients)]
     assert len(channels) == cfg.n_clients
@@ -160,6 +181,13 @@ def run_sim(
     def push(t: float, kind: int, payload) -> None:
         heapq.heappush(events, (t, kind, next(seq), payload))
 
+    # Storm windows multiply the Poisson rate; the multiplier is evaluated
+    # at scheduling time (rate-modulated, not exactly thinned — fine for a
+    # fault injector).
+    def arrival_rate(t: float) -> float:
+        mult = chaos.storm_multiplier(t) if chaos is not None else 1.0
+        return cfg.arrival_rate_hz * mult
+
     if arrivals is not None:
         for t, c in arrivals:
             assert 0 <= c < cfg.n_clients, (t, c)
@@ -168,7 +196,7 @@ def run_sim(
         # Seed one arrival per client; each arrival schedules the next.  The
         # window check matches the one applied to subsequent arrivals.
         for c in range(cfg.n_clients):
-            t0 = rng.exponential(1.0 / cfg.arrival_rate_hz)
+            t0 = rng.exponential(1.0 / arrival_rate(0.0))
             if t0 < cfg.duration_s:
                 push(t0, _ARRIVAL, c)
 
@@ -193,9 +221,14 @@ def run_sim(
         del server_queue[: len(take)]
         batch_sizes.append(len(take))
         if engine is not None:
-            busy = float(engine(take))
+            busy = float(engine(take, now=now) if engine_takes_now
+                         else engine(take))
         else:
             busy = cfg.server_base_s + cfg.server_per_item_s * len(take)
+        if chaos is not None:
+            # A batch started inside a stall window pays the remaining
+            # stall before its compute runs (frozen server, work queued).
+            busy += max(0.0, chaos.stall_until(now) - now)
         server_busy = True
         push(now + busy, _SERVER_DONE, take)
 
@@ -214,7 +247,7 @@ def run_sim(
                 push(now, _UPLINK_START, c)
             if arrivals is None:
                 # Next arrival for this client (within the arrival window).
-                t_next = now + rng.exponential(1.0 / cfg.arrival_rate_hz)
+                t_next = now + rng.exponential(1.0 / arrival_rate(now))
                 if t_next < cfg.duration_s:
                     push(t_next, _ARRIVAL, c)
         elif kind == _UPLINK_START:
@@ -222,9 +255,18 @@ def run_sim(
             req = client_pending[c].popleft()
             client_busy[c] = True
             req.t_uplink_start = now
-            result, ch_state[c] = protocol.run_round(
-                rng, channels[c], ch_state[c], cfg.n_packets
-            )
+            override = (chaos.loss_override(now) if chaos is not None
+                        else None)
+            if override is not None:
+                # Collapse window: draw from the overlay process at the
+                # override rate; the real channel's burst state stays put.
+                result, _ = protocol.run_round(
+                    rng, _OverrideChannel(override), None, cfg.n_packets
+                )
+            else:
+                result, ch_state[c] = protocol.run_round(
+                    rng, channels[c], ch_state[c], cfg.n_packets
+                )
             t_up = now + result.slots * slot_t
             req.t_uplink_done = t_up
             req.delivered_fraction = result.delivered_fraction

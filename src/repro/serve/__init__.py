@@ -25,6 +25,7 @@ from repro.serve.engine import (  # noqa: F401
 from repro.serve.continuous import (  # noqa: F401
     ContinuousEngine,
     PoolConfig,
+    PoolExhausted,
     Request,
     clear_engines,
     engine_for,
@@ -32,4 +33,10 @@ from repro.serve.continuous import (  # noqa: F401
     padding_safe,
     pool_engine,
     pow2_bucket,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    SLA,
+    SLAScheduler,
+    VirtualClock,
+    protocol_feasibility,
 )

@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -74,6 +75,7 @@ from repro.launch.steps import make_serve_step
 from repro.models import attention as attention_lib, cache as cache_lib, lm
 from repro.obs import device as obs_device
 from repro.serve.engine import abstract_like
+from repro.serve.scheduler import SLA
 
 
 def pow2_bucket(n: int, floor: int = 8) -> int:
@@ -121,6 +123,11 @@ class PoolConfig:
     paged: bool = False
     block_size: int = 16         # KV rows per pool block (paged only)
     num_blocks: int = 0          # physical blocks incl. trash; 0 = derive
+    # Backpressure budget when NO scheduler is installed: consecutive
+    # no-progress steps (queue non-empty, nothing live, nothing
+    # admissible) the engine tolerates before raising PoolExhausted
+    # instead of head-of-line blocking forever.
+    exhaust_wait_steps: int = 1000
 
     @property
     def max_bucket(self) -> int:
@@ -157,10 +164,21 @@ class Request:
     t_first_token: float = 0.0    # prefill produced the first token
     t_done: float = 0.0           # last decode round completed
     t_retire: float = 0.0         # output harvested to host
+    # SLA scheduling (repro.serve.scheduler) — defaults are best-effort.
+    sla: Optional[SLA] = None
+    state: str = "queued"         # queued|running|completed|expired|rejected
+    n_preempts: int = 0           # times evicted mid-flight (recompute resume)
+    retries: int = 0              # admission attempts that hit backoff
+    t_deadline: float = math.inf  # absolute, on the scheduler's clock
 
     @property
     def done(self) -> bool:
         return self.tokens is not None
+
+    @property
+    def terminal(self) -> bool:
+        """Terminally resolved: the scheduler will never touch it again."""
+        return self.state in ("completed", "expired", "rejected")
 
     @property
     def ttft_s(self) -> float:
@@ -178,6 +196,30 @@ class Request:
     @property
     def e2e_s(self) -> float:
         return self.t_done - self.t_submit
+
+
+class PoolExhausted(RuntimeError):
+    """Typed backpressure signal: with no scheduler installed, the engine
+    waited ``PoolConfig.exhaust_wait_steps`` consecutive steps with queued
+    work, zero live slots, and nothing admissible (e.g. a chaos block
+    squeeze holding the pool) — the caller must shed load or free
+    capacity instead of the old behavior (head-of-line blocking forever).
+    The wait budget re-arms after the raise, so drivers that catch and
+    retry get the full budget again."""
+
+    def __init__(self, *, waited_steps: int, queued: int, free_slots: int,
+                 free_blocks: int, need_blocks: int):
+        self.waited_steps = waited_steps
+        self.queued = queued
+        self.free_slots = free_slots
+        self.free_blocks = free_blocks
+        self.need_blocks = need_blocks
+        super().__init__(
+            f"admission stalled for {waited_steps} steps: {queued} queued, "
+            f"{free_slots} free slots, {free_blocks} free blocks "
+            f"(head needs {need_blocks}); install an SLAScheduler for "
+            "preemption/shedding or free pool capacity"
+        )
 
 
 class ContinuousEngine:
@@ -236,6 +278,11 @@ class ContinuousEngine:
         self._finished: List[Request] = []
         self._req_metrics: collections.deque = collections.deque(maxlen=4096)
         self._rid = 0
+        # Optional SLA scheduler (repro.serve.scheduler.SLAScheduler):
+        # when attached, submit() routes into its ready queue and step()
+        # calls its tick() in place of FIFO admission.
+        self.scheduler = None
+        self._stalled_steps = 0
         # Paged-pool host allocator: block 0 is the reserved trash block
         # and is never handed out; free list is LIFO so a freed request's
         # blocks are reused first (stale-row safety is the n_valid mask's
@@ -588,6 +635,11 @@ class ContinuousEngine:
     def _ensure(self, params) -> None:
         if self._state is None:
             self._state = self._init_state()
+            # Warm the deaden-slot scatter (a no-op on the all-zero budget)
+            # so a mid-run preemption never compiles anything: the slot
+            # index is a device scalar, so ONE cached program serves every
+            # slot and the steady state stays build-free.
+            self._deaden_slot(0)
         if self._decode_fn is None:
             avals = (abstract_like(params), abstract_like(self._state))
             self._decode_fn = self._aot(self._make_decode_step(), (1,), avals)
@@ -628,7 +680,26 @@ class ContinuousEngine:
     def active(self) -> int:
         return sum(r is not None for r in self._slot_req)
 
-    def _blocks_needed(self, prompt_len: int, max_tokens: int) -> int:
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free)
+
+    def free_block_count(self) -> int:
+        """Blocks the host allocator could hand out right now (paged)."""
+        return len(self._free_blocks)
+
+    def running_slots(self) -> List[Tuple[int, Request]]:
+        """(slot, request) for every in-flight slot — the scheduler's
+        preemption-victim candidates (host mirrors only, no device read)."""
+        return [
+            (slot, req) for slot, req in enumerate(self._slot_req)
+            if req is not None
+        ]
+
+    def blocks_held(self, slot: int) -> int:
+        return len(self._slot_blocks[slot])
+
+    def blocks_needed(self, prompt_len: int, max_tokens: int) -> int:
         """Blocks one request reserves for its whole lifetime: the padded
         prefill rows plus every decode write, capped by the rotation at
         ``max_seq`` (and hence by the block-table row width)."""
@@ -639,8 +710,17 @@ class ContinuousEngine:
         )
         return min(cache_lib.blocks_for(rows, p.block_size), p.blocks_per_slot)
 
+    def attach_scheduler(self, sched) -> None:
+        """Install an SLA scheduler; must happen before any traffic (a
+        half-FIFO, half-scheduled queue would have no coherent order)."""
+        assert not self._queue and self.active == 0, (
+            "attach the scheduler before submitting traffic"
+        )
+        self.scheduler = sched
+
     def submit(
-        self, prompt, max_tokens: int, key: Optional[jax.Array] = None
+        self, prompt, max_tokens: int, key: Optional[jax.Array] = None,
+        sla: Optional[SLA] = None,
     ) -> Request:
         """Queue one request; returns its handle (filled in by run())."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
@@ -655,7 +735,7 @@ class ContinuousEngine:
             # head-of-line on a full pool (progress is guaranteed because
             # live requests retire), but a request needing more blocks than
             # the pool HAS would deadlock the queue forever.
-            need = self._blocks_needed(prompt.size, int(max_tokens))
+            need = self.blocks_needed(prompt.size, int(max_tokens))
             cap = self.pool.total_blocks - 1
             if need > cap:
                 raise ValueError(
@@ -669,9 +749,13 @@ class ContinuousEngine:
         req = Request(
             rid=self._rid, prompt=prompt, max_tokens=int(max_tokens),
             key=jnp.asarray(key, jnp.uint32), t_submit=time.perf_counter(),
+            sla=sla,
         )
         self._rid += 1
-        self._queue.append(req)
+        if self.scheduler is not None:
+            self.scheduler.enqueue(req)
+        else:
+            self._queue.append(req)
         obs.registry().counter("serve.requests_submitted").inc()
         return req
 
@@ -724,67 +808,115 @@ class ContinuousEngine:
         reg.counter("serve.tokens_generated").inc(req.max_tokens)
 
     def _admit(self, params) -> None:
+        # FIFO admission (no scheduler): strict arrival order, so a head
+        # that does not fit blocks everyone behind it — progress is
+        # guaranteed by retirements, and step() converts a permanent stall
+        # into PoolExhausted after the wait budget.
+        while self._queue and self.try_admit(params, self._queue[0]):
+            self._queue.popleft()
+
+    def try_admit(self, params, req: Request) -> bool:
+        """Admit ONE request into a free slot if resources allow; returns
+        False (no side effects) when there is no free slot or — paged —
+        not enough free blocks.  The scheduler's tick() probes candidates
+        in ITS order through this; FIFO _admit() probes only the head."""
         p = self.pool
-        while self._queue and self._free:
-            if p.paged:
-                # Pool-exhaustion gate BEFORE committing to the admission:
-                # a full pool blocks head-of-line (live slots never lose
-                # blocks; retirements will free some) instead of partially
-                # admitting or stealing from a live request.
-                head = self._queue[0]
-                need = self._blocks_needed(head.prompt.size, head.max_tokens)
-                if need > len(self._free_blocks):
-                    break
-            if self._pending_harvest:
-                # A freed slot's output row is about to be zeroed: read the
-                # finished requests first (one host sync for all of them).
-                self._harvest()
-            req = self._queue.popleft()
-            slot = self._free.pop()
-            bucket = self.bucket_for(req.prompt.size)
-            fn = self._prefill_for(params, bucket)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, : req.prompt.size] = req.prompt
-            req.bucket = bucket
-            extra = ()
-            if p.paged:
-                blocks = [self._free_blocks.pop() for _ in range(need)]
-                self._slot_blocks[slot] = blocks
-                bt_row = np.zeros((p.blocks_per_slot,), np.int32)
-                bt_row[: len(blocks)] = blocks
-                extra = (jnp.asarray(bt_row),)
-            # Admission is the scheduling decision, so stamp it BEFORE the
-            # prefill dispatch — the old after-dispatch stamp folded the
-            # prefill into the "queue wait" phase and made TTFT's prefill
-            # component unmeasurable.
-            req.t_admit = time.perf_counter()
-            self._state = fn(
-                params, self._state, jnp.asarray(padded),
-                jnp.asarray(req.prompt.size, jnp.int32),
-                jnp.asarray(slot, jnp.int32),
-                jnp.asarray(req.max_tokens, jnp.int32),
-                req.key,
-                *extra,
+        if not self._free:
+            return False
+        need = 0
+        if p.paged:
+            # Pool-exhaustion gate BEFORE committing to the admission: a
+            # full pool refuses (live slots never lose blocks here;
+            # retirements — or the scheduler's preemptions — free some)
+            # instead of partially admitting or stealing from a live slot.
+            need = self.blocks_needed(req.prompt.size, req.max_tokens)
+            if need > len(self._free_blocks):
+                return False
+        if self._pending_harvest:
+            # A freed slot's output row is about to be zeroed: read the
+            # finished requests first (one host sync for all of them).
+            self._harvest()
+        slot = self._free.pop()
+        bucket = self.bucket_for(req.prompt.size)
+        fn = self._prefill_for(params, bucket)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, : req.prompt.size] = req.prompt
+        req.bucket = bucket
+        extra = ()
+        if p.paged:
+            blocks = [self._free_blocks.pop() for _ in range(need)]
+            self._slot_blocks[slot] = blocks
+            bt_row = np.zeros((p.blocks_per_slot,), np.int32)
+            bt_row[: len(blocks)] = blocks
+            extra = (jnp.asarray(bt_row),)
+        # Admission is the scheduling decision, so stamp it BEFORE the
+        # prefill dispatch — the old after-dispatch stamp folded the
+        # prefill into the "queue wait" phase and made TTFT's prefill
+        # component unmeasurable.
+        req.t_admit = time.perf_counter()
+        self._state = fn(
+            params, self._state, jnp.asarray(padded),
+            jnp.asarray(req.prompt.size, jnp.int32),
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(req.max_tokens, jnp.int32),
+            req.key,
+            *extra,
+        )
+        self._slot_req[slot] = req
+        self._remaining[slot] = req.max_tokens
+        req.state = "running"
+        if p.paged:
+            nb = min(
+                cache_lib.blocks_for(bucket, p.block_size),
+                p.blocks_per_slot,
             )
-            self._slot_req[slot] = req
-            self._remaining[slot] = req.max_tokens
-            if p.paged:
-                nb = min(
-                    cache_lib.blocks_for(bucket, p.block_size),
-                    p.blocks_per_slot,
-                )
-                self.blocks_written += nb
-                used = sum(len(b) for b in self._slot_blocks)
-                self.peak_blocks_used = max(self.peak_blocks_used, used)
-                obs.registry().counter("serve.blocks_written").inc(nb)
-                self._publish_pool_gauges()
-            if obs.registry().enabled:
-                # Honest TTFT: the first token is computed by the prefill
-                # program, so block on it before stamping.  Only with obs
-                # on — the disabled path keeps the async pipeline and the
-                # stamp is a dispatch-time lower bound.
-                jax.block_until_ready(self._state["token"])  # noqa: RPA005 — sanctioned sync point (honest TTFT, obs-on only)
-            req.t_first_token = time.perf_counter()
+            self.blocks_written += nb
+            used = sum(len(b) for b in self._slot_blocks)
+            self.peak_blocks_used = max(self.peak_blocks_used, used)
+            obs.registry().counter("serve.blocks_written").inc(nb)
+            self._publish_pool_gauges()
+        if obs.registry().enabled:
+            # Honest TTFT: the first token is computed by the prefill
+            # program, so block on it before stamping.  Only with obs
+            # on — the disabled path keeps the async pipeline and the
+            # stamp is a dispatch-time lower bound.
+            jax.block_until_ready(self._state["token"])  # noqa: RPA005 — sanctioned sync point (honest TTFT, obs-on only)
+        req.t_first_token = time.perf_counter()
+        return True
+
+    def _deaden_slot(self, slot: int) -> None:
+        """Zero a slot's generation budget on device: the decode step's
+        live mask (``n_gen < budget``) stops its scalar updates, and — in
+        paged mode — routes its cache writes to the trash block.  The slot
+        index is a device scalar so ONE cached scatter serves every slot
+        (warmed at state init; preemption never builds a program)."""
+        self._state["budget"] = (
+            self._state["budget"].at[jnp.asarray(slot, jnp.int32)].set(0)
+        )
+
+    def preempt_slot(self, slot: int) -> Request:
+        """Evict the slot's in-flight request (scheduler preemption):
+        recompute-on-resume, vLLM-style.  Deaden the slot on device FIRST
+        — once its blocks return to the allocator they can be handed to
+        the very next admission, and a still-live slot would keep writing
+        through its stale block table into them.  Then release the host
+        mirrors; re-admission replays the request from scratch under the
+        same key, so the resumed run is greedy token-identical to an
+        uninterrupted one."""
+        req = self._slot_req[slot]
+        assert req is not None, f"slot {slot} has no in-flight request"
+        self._deaden_slot(slot)
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        self._free.append(slot)
+        if self.pool.paged:
+            self._free_blocks.extend(reversed(self._slot_blocks[slot]))
+            self._slot_blocks[slot] = []
+            self._publish_pool_gauges()
+        req.state = "queued"
+        req.n_preempts += 1
+        obs.registry().counter("serve.preemptions").inc()
+        return req
 
     def _pool_fragmentation(self) -> float:
         """Internal fragmentation of the live reservations: 1 − (rows
@@ -849,24 +981,58 @@ class ContinuousEngine:
             now = time.perf_counter()
             for slot, req in completed:
                 req.t_done = now
+                req.state = "completed"
                 self._pending_harvest.append((slot, req))
                 self._finished.append(req)
+                if self.scheduler is not None:
+                    # Deadline-hit accounting rides the sanctioned
+                    # completion sync above — no extra device read.
+                    self.scheduler.on_complete(self, req)
 
     def step(self, params) -> None:
-        """One scheduler tick: admit from the queue into free slots, then
-        run one fused decode step over the pool (if anything is live)."""
+        """One engine tick: admit (scheduler tick when one is attached,
+        FIFO otherwise), then run one fused decode step over the pool (if
+        anything is live).  Unscheduled no-progress stalls are bounded by
+        ``PoolConfig.exhaust_wait_steps`` → ``PoolExhausted``."""
         self._ensure(params)
-        self._admit(params)
+        if self.scheduler is not None:
+            self.scheduler.tick(self, params)
+        else:
+            self._admit(params)
         if self.active:
+            self._stalled_steps = 0
             self._decode_once(params)
+        elif self.scheduler is None and self._queue:
+            self._stalled_steps += 1
+            if self._stalled_steps > self.pool.exhaust_wait_steps:
+                waited, self._stalled_steps = self._stalled_steps, 0
+                head = self._queue[0]
+                raise PoolExhausted(
+                    waited_steps=waited,
+                    queued=len(self._queue),
+                    free_slots=len(self._free),
+                    free_blocks=len(self._free_blocks),
+                    need_blocks=self.blocks_needed(
+                        head.prompt.size, head.max_tokens
+                    ) if self.pool.paged else 0,
+                )
+        else:
+            self._stalled_steps = 0
 
     def run(self, params) -> List[Request]:
         """Drive until the queue and the pool are empty; returns every
-        request finished since the last run (harvested, ``tokens`` filled)."""
+        request finished since the last run (harvested, ``tokens`` filled).
+        With a scheduler attached, also drains its ready/retry queues —
+        requests it expires or rejects resolve terminally without tokens
+        (check ``req.state``).  NOTE: a scheduler on a ``VirtualClock``
+        must be driven by step()+advance() instead; run() never advances
+        virtual time, so future retry deadlines would spin forever."""
         reg = obs.registry()
         with reg.span("engine.run", queued=len(self._queue)):
             self._ensure(params)
-            while self._queue or self.active:
+            while self._queue or self.active or (
+                self.scheduler is not None and self.scheduler.pending
+            ):
                 self.step(params)
             self._harvest()
         if reg.enabled:
@@ -1030,6 +1196,8 @@ def make_sim_server(
     prompt_lens: Sequence[int] = (8, 16, 32),
     num_tokens: int = 8,
     seed: int = 0,
+    chaos=None,
+    sla_for=None,
 ):
     """Adapter for ``net.simulator.run_sim(engine=...)``: maps each sim
     request (by rid, deterministically) to a synthetic prompt whose length
@@ -1037,11 +1205,24 @@ def make_sim_server(
     batch through the live engine, and returns the measured wall seconds —
     so the simulator's reported p50/p99 include real compute *and* real
     compile behavior (the first batch hitting a new bucket pays its AOT
-    build, steady state pays none)."""
+    build, steady state pays none).
+
+    ``chaos`` (a ``net.chaos.ChaosSchedule``) applies pool-level faults —
+    the block squeeze — to the live engine at each batch's simulated start
+    time (the simulator passes ``now=`` because ``serve_batch`` declares
+    it).  ``sla_for`` maps a sim rid to an ``SLA`` when the engine has a
+    scheduler attached (None = best-effort)."""
     vocab = engine.cfg.vocab_size
     base = jax.random.PRNGKey(seed)
+    echaos = None
+    if chaos:
+        from repro.net.chaos import EngineChaos
 
-    def serve_batch(reqs) -> float:
+        echaos = EngineChaos(engine, chaos)
+
+    def serve_batch(reqs, now: float = 0.0) -> float:
+        if echaos is not None:
+            echaos.apply(now)
         t0 = time.perf_counter()
         for r in reqs:
             rid = int(r.rid)
@@ -1049,7 +1230,10 @@ def make_sim_server(
             prompt = np.random.RandomState(seed + rid).randint(
                 0, vocab, size=(length,)
             ).astype(np.int32)
-            engine.submit(prompt, num_tokens, key=jax.random.fold_in(base, rid))
+            engine.submit(
+                prompt, num_tokens, key=jax.random.fold_in(base, rid),
+                sla=sla_for(rid) if sla_for is not None else None,
+            )
         engine.run(params)
         return time.perf_counter() - t0
 

@@ -1,4 +1,4 @@
-"""Static invariant checker (repro.analysis): the six RPA rules, noqa
+"""Static invariant checker (repro.analysis): the seven RPA rules, noqa
 suppression, the baseline, the CLI, and the runtime compile guard.
 
 Rule fixtures come in violation/clean pairs: the violation asserts the
@@ -9,7 +9,7 @@ can't silently start flagging the patterns the repo is built on.
 The self-check at the bottom is the acceptance bar from ISSUE 7:
 ``python -m repro.analysis src tests benchmarks`` exits 0 on the repo at
 HEAD with the committed baseline, and exits nonzero on a seeded fixture
-tree violating all six rules.
+tree violating all seven rules.
 """
 
 import os
@@ -359,6 +359,56 @@ class TestBarePrint:
 
 
 # ---------------------------------------------------------------------------
+# RPA007 — host scheduler/chaos layer discipline
+# ---------------------------------------------------------------------------
+
+class TestHostLayerDiscipline:
+    def test_engine_internal_access_flags(self):
+        assert codes("""
+            def tick(self, engine, params):
+                engine._state["budget"] = 0
+        """, path="src/repro/serve/scheduler.py",
+            select=["RPA007"]) == ["RPA007"]
+
+    def test_deaden_slot_reach_through_flags(self):
+        assert codes("""
+            def preempt(self, engine, slot):
+                engine._deaden_slot(slot)
+        """, path="src/repro/net/chaos.py",
+            select=["RPA007"]) == ["RPA007"]
+
+    def test_device_sync_calls_flag(self):
+        assert codes("""
+            import jax
+            def peek(self, x):
+                jax.block_until_ready(x)
+                return x.item()
+        """, path="src/repro/serve/scheduler.py",
+            select=["RPA007"]) == ["RPA007", "RPA007"]
+
+    def test_public_host_api_clean(self):
+        """The sanctioned surface — try_admit / preempt_slot /
+        running_slots / block accounting, and the chaos squeeze's
+        documented ``_free_blocks`` allocator access — stays silent."""
+        assert codes("""
+            def tick(self, engine, params):
+                for slot, vr in engine.running_slots():
+                    if engine.free_block_count() < engine.blocks_needed(
+                            vr.prompt.size, vr.max_tokens):
+                        engine.preempt_slot(slot)
+                engine._free_blocks.append(engine._free_blocks.pop())
+        """, path="src/repro/net/chaos.py", select=["RPA007"]) == []
+
+    def test_other_files_exempt(self):
+        """The engine itself owns its internals; the rule only polices
+        the host scheduling/chaos layer."""
+        assert codes("""
+            def step(self, params):
+                self._state = self._decode_fn(params, self._state)
+        """, path="src/repro/serve/continuous.py", select=["RPA007"]) == []
+
+
+# ---------------------------------------------------------------------------
 # suppression + baseline
 # ---------------------------------------------------------------------------
 
@@ -448,7 +498,7 @@ class TestCLI:
         r = _run_cli(["src", "tests", "benchmarks"], cwd=REPO_ROOT)
         assert r.returncode == 0, r.stdout + r.stderr
 
-    def test_seeded_violations_all_six_rules(self, tmp_path):
+    def test_seeded_violations_all_seven_rules(self, tmp_path):
         fixtures = {
             "bad1.py": """
                 import jax
@@ -485,6 +535,10 @@ class TestCLI:
                 def hello():
                     print('hi')
             """,
+            "src/repro/serve/scheduler.py": """
+                def tick(self, engine, params):
+                    engine._state["budget"] = 0
+            """,
         }
         for rel, src in fixtures.items():
             p = tmp_path / rel
@@ -493,7 +547,7 @@ class TestCLI:
         r = _run_cli([".", "--no-baseline"], cwd=tmp_path)
         assert r.returncode == 1, r.stdout + r.stderr
         for code in ("RPA001", "RPA002", "RPA003", "RPA004", "RPA005",
-                     "RPA006"):
+                     "RPA006", "RPA007"):
             assert code in r.stdout, (code, r.stdout)
 
     def test_write_baseline_then_clean(self, tmp_path):

@@ -1,0 +1,286 @@
+"""Chaos fault-injection harness (repro.net.chaos) + the analytic
+deadline-feasibility oracle the scheduler sheds against.
+
+* ``Fault`` / ``ChaosSchedule`` — constructor validation and point-in-time
+  queries (override = worst active window, half-open ``[t0, t1)``);
+* ``_OverrideChannel`` — i.i.d. overlay at the override rate with
+  pass-through state, so a collapse never advances the real channel's
+  burst state;
+* ``run_sim(chaos=...)`` — a total collapse window kills every uplink
+  inside it, a server stall inflates end-to-end latency by the remaining
+  stall, a burst storm multiplies Poisson arrivals;
+* ``EngineChaos`` — block-pool squeeze steals FREE blocks only, tops up
+  as capacity frees, and hands everything back LIFO when the window
+  closes (host-allocator surgery, verified on a ledger double);
+* ``deadline_feasible`` — exact at both loss extremes for all three
+  protocols: 1.0 at ``loss_rate=0.0`` under a covering deadline, exactly
+  0.0 (never NaN) at ``loss_rate=1.0``.
+"""
+
+import math
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import link
+from repro.net import (
+    ChaosSchedule,
+    Fault,
+    IIDChannel,
+    SimConfig,
+    block_pool_squeeze,
+    burst_storm,
+    channel_collapse,
+    deadline_feasible,
+    make_protocol,
+    run_sim,
+    server_stall,
+)
+from repro.net.chaos import EngineChaos, _OverrideChannel
+
+
+class TestFaultValidation:
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            Fault("power_cut", 0.0, 1.0)
+
+    def test_empty_window_raises(self):
+        with pytest.raises(ValueError, match="empty fault window"):
+            Fault("server_stall", 2.0, 2.0)
+
+    def test_storm_below_one_raises(self):
+        with pytest.raises(ValueError, match="arrival rate"):
+            burst_storm(0.0, 1.0, rate_multiplier=0.5)
+
+    @pytest.mark.parametrize("fraction", [0.0, 1.5])
+    def test_squeeze_fraction_out_of_range_raises(self, fraction):
+        with pytest.raises(ValueError, match="fraction"):
+            block_pool_squeeze(0.0, 1.0, fraction=fraction)
+
+    def test_collapse_clamps_loss_rate(self):
+        assert channel_collapse(0.0, 1.0, loss_rate=7.0).loss_rate == 1.0
+        assert channel_collapse(0.0, 1.0, loss_rate=-1.0).loss_rate == 0.0
+
+
+class TestChaosSchedule:
+    def test_empty_schedule_is_falsy_noop(self):
+        sched = ChaosSchedule()
+        assert not sched
+        assert sched.loss_override(0.0) is None
+        assert sched.stall_until(3.0) == 3.0
+        assert sched.storm_multiplier(0.0) == 1.0
+        assert sched.squeeze_fraction(0.0) == 0.0
+
+    def test_window_is_half_open(self):
+        sched = ChaosSchedule([channel_collapse(1.0, 2.0, 0.9)])
+        assert sched.loss_override(0.999) is None
+        assert sched.loss_override(1.0) == 0.9
+        assert sched.loss_override(2.0) is None
+
+    def test_overlapping_windows_take_the_worst(self):
+        sched = ChaosSchedule([
+            channel_collapse(0.0, 10.0, 0.5),
+            channel_collapse(3.0, 5.0, 1.0),
+            burst_storm(0.0, 10.0, 2.0),
+            burst_storm(4.0, 6.0, 5.0),
+            block_pool_squeeze(0.0, 10.0, 0.3),
+            block_pool_squeeze(4.0, 5.0, 0.8),
+        ])
+        assert sched.loss_override(1.0) == 0.5
+        assert sched.loss_override(4.0) == 1.0
+        assert sched.storm_multiplier(4.5) == 5.0
+        assert sched.storm_multiplier(7.0) == 2.0
+        assert sched.squeeze_fraction(4.5) == 0.8
+        assert sched.squeeze_fraction(8.0) == 0.3
+
+    def test_stall_until_latest_covering_window(self):
+        sched = ChaosSchedule([server_stall(1.0, 2.0), server_stall(2.0, 3.0)])
+        assert sched.stall_until(2.5) == 5.0
+        assert sched.stall_until(0.5) == 0.5
+
+
+class TestOverrideChannel:
+    def test_total_collapse_drops_everything(self):
+        rng = np.random.RandomState(0)
+        keep, state = _OverrideChannel(1.0).step(rng, "burst-state", 64)
+        assert not keep.any()
+        assert state == "burst-state"       # pass-through, never advanced
+
+    def test_zero_rate_keeps_everything(self):
+        rng = np.random.RandomState(0)
+        keep, _ = _OverrideChannel(0.0).step(rng, None, 64)
+        assert keep.all()
+
+    def test_stationary_loss_rate_reports_override(self):
+        assert _OverrideChannel(0.7).stationary_loss_rate == 0.7
+
+
+class TestSimulatorChaos:
+    """End-to-end fault effects through run_sim, hand-scheduled arrivals
+    for determinism."""
+
+    def _cfg(self, **kw):
+        kw.setdefault("n_clients", 2)
+        kw.setdefault("n_packets", 8)
+        kw.setdefault("duration_s", 4.0)
+        return SimConfig(**kw)
+
+    def test_collapse_window_drops_covered_uplinks(self):
+        cfg = self._cfg()
+        arrivals = [(0.5, 0), (1.0, 1), (3.0, 0)]   # third is post-window
+        chaos = ChaosSchedule([channel_collapse(0.0, 2.0, 1.0)])
+        clean = [IIDChannel(0.0), IIDChannel(0.0)]
+        rep = run_sim(cfg, channels=clean, arrivals=arrivals, chaos=chaos)
+        assert rep.arrived == 3
+        assert rep.dropped == 2             # both in-window uplinks died
+        assert rep.served == 1              # the 3.0 s arrival sails through
+
+    def test_stall_inflates_latency_by_remaining_stall(self):
+        cfg = self._cfg(n_clients=1)
+        arrivals = [(0.0, 0)]
+        clean = [IIDChannel(0.0)]
+        base = run_sim(cfg, channels=clean, arrivals=arrivals)
+        stalled = run_sim(
+            cfg, channels=[IIDChannel(0.0)], arrivals=arrivals,
+            chaos=ChaosSchedule([server_stall(0.0, 2.0)]),
+        )
+        assert base.served == stalled.served == 1
+        # The batch starts inside [0, 2) and pays the remaining stall.
+        assert stalled.latency_p50_s > base.latency_p50_s + 1.5
+        assert stalled.latency_p50_s < base.latency_p50_s + 2.0 + 1e-6
+
+    def test_storm_multiplies_poisson_arrivals(self):
+        cfg = self._cfg(n_clients=4, arrival_rate_hz=1.0, duration_s=6.0,
+                        seed=3)
+        base = run_sim(cfg, channels=[IIDChannel(0.0)] * 4)
+        storm = run_sim(
+            cfg, channels=[IIDChannel(0.0)] * 4,
+            chaos=ChaosSchedule([burst_storm(0.0, 6.0, 6.0)]),
+        )
+        assert storm.arrived > 2 * base.arrived
+
+    def test_conservation_holds_under_chaos(self):
+        cfg = self._cfg(n_clients=3, arrival_rate_hz=2.0, duration_s=5.0)
+        chaos = ChaosSchedule([
+            channel_collapse(1.0, 2.0, 1.0),
+            server_stall(2.5, 0.5),
+            burst_storm(3.0, 4.0, 4.0),
+        ])
+        rep = run_sim(cfg, channels=[IIDChannel(0.1)] * 3, chaos=chaos)
+        assert rep.arrived == rep.served + rep.dropped
+        assert rep.arrived > 0
+
+
+def _ledger_engine(allocatable=8, paged=True):
+    """A host-allocator double with the two members EngineChaos touches:
+    ``pool.(paged|total_blocks)`` and the ``_free_blocks`` LIFO."""
+    return types.SimpleNamespace(
+        pool=types.SimpleNamespace(paged=paged, total_blocks=allocatable + 1),
+        _free_blocks=list(range(1, allocatable + 1)),
+    )
+
+
+class TestEngineChaosSqueeze:
+    def test_steals_free_blocks_only_up_to_target(self):
+        eng = _ledger_engine(allocatable=8)
+        eng._free_blocks = eng._free_blocks[:3]      # 5 blocks are "live"
+        chaos = EngineChaos(
+            eng, ChaosSchedule([block_pool_squeeze(0.0, 10.0, 0.75)])
+        )
+        chaos.apply(1.0)
+        # Target is 6 of 8 allocatable, but only the 3 free ones may move.
+        assert chaos.held_blocks == 3
+        assert eng._free_blocks == []
+
+    def test_pressure_builds_as_blocks_free(self):
+        eng = _ledger_engine(allocatable=8)
+        eng._free_blocks = [1, 2]
+        chaos = EngineChaos(
+            eng, ChaosSchedule([block_pool_squeeze(0.0, 10.0, 0.5)])
+        )
+        chaos.apply(1.0)
+        assert chaos.held_blocks == 2
+        eng._free_blocks.extend([7, 8])              # a request retires
+        chaos.apply(2.0)
+        assert chaos.held_blocks == 4                # topped up to target
+        assert len(eng._free_blocks) == 0
+
+    def test_window_close_returns_blocks_lifo(self):
+        eng = _ledger_engine(allocatable=4)
+        before = list(eng._free_blocks)
+        chaos = EngineChaos(
+            eng, ChaosSchedule([block_pool_squeeze(0.0, 5.0, 1.0)])
+        )
+        chaos.apply(0.0)
+        assert eng._free_blocks == []
+        assert chaos.held_blocks == 4
+        chaos.apply(5.0)                             # window over
+        assert chaos.held_blocks == 0
+        # LIFO steal + LIFO return restores the allocator's exact order.
+        assert eng._free_blocks == before
+
+    def test_release_all_and_contiguous_noop(self):
+        eng = _ledger_engine(allocatable=4)
+        chaos = EngineChaos(
+            eng, ChaosSchedule([block_pool_squeeze(0.0, 5.0, 1.0)])
+        )
+        chaos.apply(1.0)
+        chaos.release_all()
+        assert chaos.held_blocks == 0
+        assert sorted(eng._free_blocks) == [1, 2, 3, 4]
+
+        flat = _ledger_engine(allocatable=4, paged=False)
+        chaos2 = EngineChaos(
+            flat, ChaosSchedule([block_pool_squeeze(0.0, 5.0, 1.0)])
+        )
+        chaos2.apply(1.0)                            # contiguous pool: no-op
+        assert chaos2.held_blocks == 0
+        assert len(flat._free_blocks) == 4
+
+
+class TestDeadlineFeasible:
+    """Satellite 2: exactness at the loss extremes, all three protocols."""
+
+    PROTOS = ["unreliable", "arq", "fec_arq"]
+
+    @pytest.mark.parametrize("name", PROTOS)
+    def test_lossless_link_is_certain_within_deadline(self, name):
+        cfg = link.ChannelConfig(loss_rate=0.0)
+        p = deadline_feasible(make_protocol(name), 16, cfg, deadline_s=10.0)
+        assert p == pytest.approx(1.0, abs=1e-9)
+
+    @pytest.mark.parametrize("name", PROTOS)
+    def test_total_loss_is_exactly_zero_not_nan(self, name):
+        cfg = link.ChannelConfig(loss_rate=1.0)
+        p = deadline_feasible(make_protocol(name), 16, cfg, deadline_s=10.0)
+        assert p == 0.0
+        assert not math.isnan(p)
+
+    @pytest.mark.parametrize("name", PROTOS)
+    def test_negative_deadline_is_zero(self, name):
+        cfg = link.ChannelConfig(loss_rate=0.1)
+        assert deadline_feasible(make_protocol(name), 16, cfg, -1.0) == 0.0
+
+    def test_deadline_below_first_shot_latency_is_zero_when_lossless(self):
+        cfg = link.ChannelConfig(loss_rate=0.0)
+        proto = make_protocol("unreliable")
+        first_shot = 16 * cfg.slot_time_s()
+        assert deadline_feasible(proto, 16, cfg, first_shot / 2) == 0.0
+        assert deadline_feasible(proto, 16, cfg, first_shot * 1.01) == \
+            pytest.approx(1.0, abs=1e-9)
+
+    def test_monotone_in_deadline_and_loss(self):
+        cfg = link.ChannelConfig(loss_rate=0.3)
+        proto = make_protocol("arq", max_rounds=4)
+        deadlines = [0.0, 0.002, 0.01, 0.05, 1.0]
+        ps = [deadline_feasible(proto, 16, cfg, d) for d in deadlines]
+        assert all(b >= a - 1e-12 for a, b in zip(ps, ps[1:]))
+        loose = deadline_feasible(proto, 16, cfg, 1.0, loss_rate=0.05)
+        tight = deadline_feasible(proto, 16, cfg, 1.0, loss_rate=0.8)
+        assert loose > tight
+
+    def test_loss_rate_override_beats_config(self):
+        cfg = link.ChannelConfig(loss_rate=0.0)
+        proto = make_protocol("unreliable")
+        assert deadline_feasible(proto, 16, cfg, 10.0, loss_rate=1.0) == 0.0

@@ -531,7 +531,7 @@ class TestPagedObs:
         # One scheduler tick: all four admissions land, nothing retires.
         eng.step(params)
         oracle_used = sum(
-            eng._blocks_needed(L, 4) for L in lengths
+            eng.blocks_needed(L, 4) for L in lengths
         )
         assert reg.gauge("serve.pool_blocks_used").value == float(oracle_used)
         assert reg.gauge("serve.pool_blocks_total").value == float(

@@ -1,0 +1,551 @@
+"""SLA scheduler over the continuous engine (repro.serve.scheduler).
+
+Two layers of coverage:
+
+* **Unit** — the scheduling policy against a slot/block ledger double
+  with the engine's public host API: EDF-within-priority order, deadline
+  / EMA / feasibility-oracle expiry, bounded retry with backoff into
+  terminal rejection, strictly-lower-priority all-or-nothing preemption.
+* **Integration (acceptance)** — preempt/resume on the REAL paged engine
+  is greedy token-identical to ``generate_reference`` for every request
+  (victims included) under iid + GE links, int8 pools, and rotating
+  windows wrapping across block boundaries; steady state with scheduler
+  + chaos squeeze performs ZERO new XLA builds under the ``no_recompile``
+  guard with ``compiles == num_buckets + 1``; and the unscheduled engine
+  raises typed ``PoolExhausted`` backpressure after its wait budget when
+  a chaos squeeze pins the pool.
+"""
+
+import dataclasses
+import math
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.guards import no_recompile
+from repro.configs import ARCHITECTURES
+from repro.launch.serve import generate_reference
+from repro.models import lm
+from repro.net import ChaosSchedule, block_pool_squeeze
+from repro.net.chaos import EngineChaos
+from repro.serve import (
+    SLA,
+    ContinuousEngine,
+    PoolConfig,
+    PoolExhausted,
+    SLAScheduler,
+    VirtualClock,
+    protocol_feasibility,
+)
+
+# ---------------------------------------------------------------------------
+# Unit layer: the policy against a ledger double of the engine host API
+# ---------------------------------------------------------------------------
+
+
+class _FakeEngine:
+    """Slot/block ledger exposing exactly the public host surface the
+    scheduler is allowed to touch (RPA007): try_admit / preempt_slot /
+    running_slots / free_slot_count / free_block_count / blocks_needed /
+    blocks_held."""
+
+    def __init__(self, slots=1, blocks=0, paged=False, block_size=4):
+        self.pool = types.SimpleNamespace(
+            paged=paged, total_blocks=blocks + 1
+        )
+        self._slots = slots
+        self._block_size = block_size
+        self._free_blocks = blocks
+        self._running = {}           # slot -> req
+        self._held = {}              # slot -> block count
+        self.admit_log = []
+
+    @property
+    def free_slot_count(self):
+        return self._slots - len(self._running)
+
+    def free_block_count(self):
+        return self._free_blocks
+
+    def running_slots(self):
+        return sorted(self._running.items())
+
+    def blocks_needed(self, prompt_len, max_tokens):
+        return -(-(prompt_len + max_tokens) // self._block_size)
+
+    def blocks_held(self, slot):
+        return self._held.get(slot, 0)
+
+    def try_admit(self, params, req):
+        if self.free_slot_count <= 0:
+            return False
+        need = (self.blocks_needed(req.prompt.size, req.max_tokens)
+                if self.pool.paged else 0)
+        if self.pool.paged and need > self._free_blocks:
+            return False
+        slot = next(s for s in range(self._slots)
+                    if s not in self._running)
+        self._running[slot] = req
+        if self.pool.paged:
+            self._free_blocks -= need
+            self._held[slot] = need
+        req.state = "running"
+        self.admit_log.append(req.rid)
+        return True
+
+    def preempt_slot(self, slot):
+        req = self._running.pop(slot)
+        self._free_blocks += self._held.pop(slot, 0)
+        req.state = "queued"
+        req.n_preempts += 1
+        return req
+
+    def complete(self, slot):
+        req = self._running.pop(slot)
+        self._free_blocks += self._held.pop(slot, 0)
+        req.state = "completed"
+        return req
+
+
+def _req(rid, *, priority=0, deadline_s=math.inf, prompt_len=4,
+         max_tokens=4, class_name="default"):
+    return types.SimpleNamespace(
+        rid=rid,
+        prompt=np.zeros(prompt_len, np.int32),
+        max_tokens=max_tokens,
+        sla=SLA(deadline_s=deadline_s, priority=priority,
+                class_name=class_name),
+        state="queued", n_preempts=0, retries=0, t_deadline=math.inf,
+    )
+
+
+def _sched(**kw):
+    kw.setdefault("clock", VirtualClock())
+    return SLAScheduler(**kw)
+
+
+class TestVirtualClock:
+    def test_advance_and_call(self):
+        clk = VirtualClock(5.0)
+        assert clk() == 5.0
+        assert clk.advance(2.5) == 7.5
+        assert clk.now == 7.5
+
+
+class TestAdmissionOrder:
+    def test_edf_within_priority(self):
+        sched = _sched()
+        eng = _FakeEngine(slots=3)
+        loose = _req(0, priority=1, deadline_s=9.0)
+        best_effort = _req(1, priority=0, deadline_s=1.0)
+        tight = _req(2, priority=1, deadline_s=2.0)
+        for r in (loose, best_effort, tight):
+            sched.enqueue(r)
+        sched.tick(eng, None)
+        # Priority first, earliest absolute deadline within a priority.
+        assert eng.admit_log == [2, 0, 1]
+        assert not sched.pending
+
+    def test_no_head_of_line_blocking(self):
+        """A resource-blocked big request must not starve the small one
+        behind it within the same tick."""
+        sched = _sched()
+        eng = _FakeEngine(slots=2, blocks=2, paged=True)
+        big = _req(0, priority=1, prompt_len=12, max_tokens=8)   # 5 blocks
+        small = _req(1, priority=0, prompt_len=2, max_tokens=2)  # 1 block
+        sched.enqueue(big)
+        sched.enqueue(small)
+        sched.tick(eng, None)
+        assert eng.admit_log == [1]
+        assert big.retries == 1          # backed off, not lost
+
+
+class TestExpiry:
+    def test_deadline_already_passed_expires_on_enqueue(self):
+        sched = _sched()
+        sched.clock.advance(10.0)
+        late = _req(0, deadline_s=0.0)
+        sched.enqueue(late)
+        assert late.state == "expired"
+        assert sched.stats["expired"] == 1
+        assert not sched.pending
+
+    def test_queued_request_expires_when_deadline_passes(self):
+        sched = _sched(backoff_s=0.01)
+        eng = _FakeEngine(slots=0)               # nothing ever admits
+        req = _req(0, deadline_s=1.0)
+        sched.enqueue(req)
+        sched.tick(eng, None)                    # blocked -> retry heap
+        assert req.state == "queued"
+        sched.clock.advance(2.0)
+        sched.tick(eng, None)                    # retry due, now hopeless
+        assert req.state == "expired"
+        assert sched.stats["expired"] == 1
+
+    def test_service_time_ema_sheds_unfinishable_decode(self):
+        sched = _sched()
+        eng = _FakeEngine(slots=1)
+        done = _req(0, max_tokens=4)
+        sched.enqueue(done)
+        sched.tick(eng, None)
+        sched.clock.advance(10.0)                # 2.5 clock-units per token
+        sched.on_complete(eng, done)
+        assert sched._tpot_ema == pytest.approx(2.5)
+        hopeless = _req(1, deadline_s=5.0, max_tokens=4)   # needs ~10
+        sched.enqueue(hopeless)
+        assert hopeless.state == "expired"
+        fine = _req(2, deadline_s=20.0, max_tokens=4)
+        sched.enqueue(fine)
+        assert fine.state == "queued"
+
+    def test_feasibility_oracle_sheds_doomed_uplinks(self):
+        sched = _sched(feasibility=lambda req, remaining: 0.0,
+                       feasibility_floor=0.0)
+        doomed = _req(0, deadline_s=5.0)
+        sched.enqueue(doomed)
+        assert doomed.state == "expired"
+        # Best-effort (infinite deadline) requests never consult the oracle.
+        forever = _req(1)
+        sched.enqueue(forever)
+        assert forever.state == "queued"
+
+    def test_protocol_feasibility_tracks_chaos_loss(self):
+        from repro.core import link
+        from repro.net import make_protocol
+
+        loss = {"p": 0.0}
+        fn = protocol_feasibility(
+            make_protocol("unreliable"), 16, link.ChannelConfig(),
+            loss_rate=lambda: loss["p"],
+        )
+        req = _req(0)
+        assert fn(req, 10.0) == pytest.approx(1.0, abs=1e-9)
+        loss["p"] = 1.0                          # mid-run channel collapse
+        assert fn(req, 10.0) == 0.0
+
+
+class TestAdmissionControl:
+    def test_bounded_retry_then_terminal_reject(self):
+        sched = _sched(max_retries=2, backoff_s=0.05, backoff_mult=2.0)
+        eng = _FakeEngine(slots=0)
+        req = _req(0)
+        sched.enqueue(req)
+        for _ in range(3):
+            sched.tick(eng, None)
+            sched.clock.advance(1.0)
+        assert req.state == "rejected"
+        assert req.retries == 3
+        assert sched.stats["rejected"] == 1
+        assert not sched.pending
+
+    def test_backoff_delay_grows_and_caps(self):
+        sched = _sched(backoff_s=0.1, backoff_mult=2.0, backoff_cap_s=0.3,
+                       max_retries=100)
+        eng = _FakeEngine(slots=0)
+        req = _req(0)
+        sched.enqueue(req)
+        due = []
+        for _ in range(4):
+            sched.tick(eng, None)
+            due.append(sched._retry[0][0] - sched.clock.now)
+            sched.clock.advance(1.0)
+        assert due == pytest.approx([0.1, 0.2, 0.3, 0.3])
+
+
+class TestPreemptionPolicy:
+    def _one_running(self, priority=0):
+        sched = _sched(backoff_s=0.01)
+        eng = _FakeEngine(slots=1, blocks=2, paged=True)
+        low = _req(0, priority=priority, prompt_len=4, max_tokens=4)
+        sched.enqueue(low)
+        sched.tick(eng, None)
+        assert low.state == "running"
+        return sched, eng, low
+
+    def test_higher_priority_preempts_and_victim_resumes(self):
+        sched, eng, low = self._one_running(priority=0)
+        hi = _req(1, priority=5, prompt_len=4, max_tokens=4)
+        sched.enqueue(hi)
+        sched.tick(eng, None)
+        assert hi.state == "running"
+        assert low.state == "queued" and low.n_preempts == 1
+        assert sched.stats["preemptions"] == 1
+        # Victim waits for the NEXT tick (anti-thrash), resumes when the
+        # preemptor's resources free up.
+        eng.complete(0)
+        sched.on_complete(eng, hi)
+        sched.tick(eng, None)
+        assert low.state == "running"
+        assert sched.stats["resumes"] == 1
+
+    def test_equal_priority_never_preempts(self):
+        sched, eng, low = self._one_running(priority=1)
+        peer = _req(1, priority=1)
+        sched.enqueue(peer)
+        sched.tick(eng, None)
+        assert low.state == "running"
+        assert peer.state == "queued"
+        assert sched.stats["preemptions"] == 0
+
+    def test_preemption_disabled_backs_off_instead(self):
+        sched = _sched(preemption=False, backoff_s=0.01)
+        eng = _FakeEngine(slots=1, blocks=2, paged=True)
+        low = _req(0, priority=0)
+        sched.enqueue(low)
+        sched.tick(eng, None)
+        hi = _req(1, priority=5)
+        sched.enqueue(hi)
+        sched.tick(eng, None)
+        assert low.state == "running" and hi.state == "queued"
+        assert sched.stats["preemptions"] == 0
+
+    def test_all_or_nothing_when_blocks_unattainable(self):
+        """If evicting EVERY lower-priority slot still could not free
+        enough blocks, nothing is evicted."""
+        sched = _sched(backoff_s=0.01)
+        eng = _FakeEngine(slots=2, blocks=4, paged=True)
+        lo0 = _req(0, priority=0, prompt_len=4, max_tokens=4)   # 2 blocks
+        lo1 = _req(1, priority=0, prompt_len=4, max_tokens=4)   # 2 blocks
+        for r in (lo0, lo1):
+            sched.enqueue(r)
+        sched.tick(eng, None)
+        giant = _req(2, priority=9, prompt_len=16, max_tokens=8)  # 6 blocks
+        sched.enqueue(giant)
+        sched.tick(eng, None)
+        assert sched.stats["preemptions"] == 0
+        assert lo0.state == "running" and lo1.state == "running"
+        assert giant.state == "queued"
+
+    def test_evicts_cheapest_victims_first(self):
+        """Lowest priority, latest deadline goes first; stop as soon as
+        the admission is satisfiable."""
+        sched = _sched(backoff_s=0.01)
+        eng = _FakeEngine(slots=2, blocks=4, paged=True)
+        batch = _req(0, priority=0, deadline_s=math.inf)
+        tight = _req(1, priority=1, deadline_s=1.0)
+        for r in (batch, tight):
+            sched.enqueue(r)
+        sched.tick(eng, None)
+        hi = _req(2, priority=5, prompt_len=4, max_tokens=4)
+        sched.enqueue(hi)
+        sched.tick(eng, None)
+        assert hi.state == "running"
+        assert batch.state == "queued"       # the best-effort one paid
+        assert tight.state == "running"
+        assert sched.stats["preemptions"] == 1
+
+
+class TestClassReport:
+    def test_hit_rate_counts_expired_and_rejected_as_misses(self):
+        sched = _sched()
+        eng = _FakeEngine(slots=1)
+        ontime = _req(0, deadline_s=10.0, class_name="interactive")
+        sched.enqueue(ontime)
+        sched.tick(eng, None)
+        eng.complete(0)
+        sched.on_complete(eng, ontime)
+        late = _req(1, deadline_s=0.0, class_name="interactive")
+        sched.enqueue(late)                  # expires on the spot
+        rep = sched.class_report()["interactive"]
+        assert rep["terminal"] == 2
+        assert rep["hits"] == 1
+        assert rep["deadline_hit_rate"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Integration layer: the real paged engine
+# ---------------------------------------------------------------------------
+
+
+def _setup_engine(channel="iid", loss_rate=0.3, **overrides):
+    cfg = ARCHITECTURES["qwen1.5-0.5b"].reduced(
+        attn_impl="flash_decode", **overrides
+    )
+    cfg = cfg.with_updates(
+        link=dataclasses.replace(cfg.link, loss_rate=loss_rate,
+                                 channel=channel)
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt(i, length, vocab):
+    return np.asarray(
+        jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(7), i), (length,), 0,
+            vocab, jnp.int32,
+        )
+    )
+
+
+def _preempt_and_check(cfg, params, pool, lo_lengths, hi_length, tokens,
+                       key):
+    """Fill the pool with low-priority traffic, force a high-priority
+    preemption mid-decode, drain, and require every request — victims
+    included — to be greedy token-identical to the uninterrupted
+    per-request reference."""
+    eng = ContinuousEngine(cfg, pool)
+    sched = SLAScheduler(backoff_s=1e-4, backoff_cap_s=1e-3,
+                         max_retries=10_000)
+    eng.attach_scheduler(sched)
+    lo = SLA(priority=0, class_name="batch")
+    hi = SLA(priority=5, class_name="interactive")
+    lengths = list(lo_lengths) + [hi_length]
+    reqs = [
+        eng.submit(_prompt(i, L, cfg.vocab_size), tokens,
+                   key=jax.random.fold_in(key, i), sla=lo)
+        for i, L in enumerate(lo_lengths)
+    ]
+    eng.step(params)                     # admit the low-priority wave
+    eng.step(params)                     # ...and decode a couple tokens
+    i_hi = len(lo_lengths)
+    reqs.append(
+        eng.submit(_prompt(i_hi, hi_length, cfg.vocab_size), tokens,
+                   key=jax.random.fold_in(key, i_hi), sla=hi)
+    )
+    eng.run(params)
+    assert sched.stats["preemptions"] >= 1, sched.stats
+    assert sched.stats["resumes"] >= 1, sched.stats
+    assert all(r.state == "completed" for r in reqs)
+    assert any(r.n_preempts > 0 for r in reqs[:-1])
+    for i, (L, req) in enumerate(zip(lengths, reqs)):
+        ref, _ = generate_reference(
+            params, cfg, jnp.asarray(_prompt(i, L, cfg.vocab_size))[None],
+            tokens, key=jax.random.fold_in(key, i),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref)[0], req.tokens,
+            err_msg=f"request {i} (len {L}, preempts {req.n_preempts})",
+        )
+    assert eng.compiles == eng.num_buckets + 1
+    return eng, sched
+
+
+class TestPreemptResumeIdentity:
+    @pytest.mark.parametrize("channel", ["iid", "ge"])
+    def test_token_identity_iid_and_ge(self, channel):
+        cfg, params = _setup_engine(channel=channel)
+        pool = PoolConfig(max_slots=2, max_new=4, max_prompt=8,
+                          min_bucket=8, paged=True, block_size=4)
+        _preempt_and_check(cfg, params, pool, [4, 6], 5, 4,
+                           jax.random.PRNGKey(42))
+
+    def test_token_identity_int8_pool(self):
+        cfg, params = _setup_engine(kv_cache_dtype="int8")
+        pool = PoolConfig(max_slots=2, max_new=5, max_prompt=8,
+                          min_bucket=8, paged=True, block_size=8)
+        _preempt_and_check(cfg, params, pool, [4, 5], 6, 5,
+                           jax.random.PRNGKey(9))
+
+    def test_token_identity_windowed_wrap(self):
+        """Victim resume with rotating windows wrapping across the block
+        boundary (window=6, block_size=4): the re-admitted prefill must
+        rebuild the wrapped layout exactly."""
+        cfg = ARCHITECTURES["gemma3-12b"].reduced(attn_impl="flash_decode")
+        pat = tuple(dataclasses.replace(s, window=6) if s.window else s
+                    for s in cfg.unit_pattern)
+        cfg = cfg.with_updates(unit_pattern=pat)
+        cfg = cfg.with_updates(
+            link=dataclasses.replace(cfg.link, loss_rate=0.3, channel="iid")
+        )
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        pool = PoolConfig(max_slots=2, max_new=8, max_prompt=8,
+                          min_bucket=4, paged=True, block_size=4)
+        _preempt_and_check(cfg, params, pool, [3, 5], 4, 8,
+                           jax.random.PRNGKey(3))
+
+
+class TestSteadyStateCompileDiscipline:
+    def test_no_recompile_with_scheduler_and_chaos(self):
+        """Zero new XLA builds in steady state with the scheduler ticking,
+        preemptions firing, and a chaos block squeeze breathing in and out
+        of the pool."""
+        cfg, params = _setup_engine()
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=2, max_new=4, max_prompt=8, min_bucket=8,
+                       paged=True, block_size=4),
+        )
+        sched = SLAScheduler(backoff_s=1e-4, backoff_cap_s=1e-3,
+                             max_retries=10_000)
+        eng.attach_scheduler(sched)
+        key = jax.random.PRNGKey(0)
+        lo = SLA(priority=0, class_name="batch")
+        hi = SLA(priority=5, class_name="interactive")
+        # Warm: the single bucket, the decode step, and a preemption.
+        for i, L in enumerate([4, 6]):
+            eng.submit(_prompt(i, L, cfg.vocab_size), 3,
+                       key=jax.random.fold_in(key, i), sla=lo)
+        eng.step(params)
+        eng.step(params)
+        eng.submit(_prompt(2, 5, cfg.vocab_size), 3,
+                   key=jax.random.fold_in(key, 2), sla=hi)
+        eng.run(params)
+        assert sched.stats["preemptions"] >= 1
+        assert eng.compiles == eng.num_buckets + 1
+        warm_compiles = eng.compiles
+
+        echaos = EngineChaos(
+            eng, ChaosSchedule([block_pool_squeeze(0.0, 1.0, 0.5)])
+        )
+        work = [
+            (_prompt(100 + i, 4 + i % 5, cfg.vocab_size), 2 + i % 3,
+             jax.random.fold_in(key, 100 + i), hi if i % 3 == 0 else lo)
+            for i in range(6)
+        ]
+        with no_recompile(engines=(eng,)):
+            echaos.apply(0.5)            # squeeze holds half the pool
+            for p, t, k, s in work:
+                eng.submit(p, t, key=k, sla=s)
+            for _ in range(4):
+                eng.step(params)
+            echaos.apply(2.0)            # window over: blocks come back
+            done = eng.run(params)
+        assert len(done) == 6
+        assert all(r.state == "completed" for r in done)
+        assert eng.compiles == warm_compiles == eng.num_buckets + 1
+        assert echaos.held_blocks == 0
+
+
+class TestPoolExhaustedBackpressure:
+    def test_unscheduled_engine_raises_typed_backpressure(self):
+        """Satellite 1: with no scheduler, a chaos squeeze pinning every
+        free block turns head-of-line blocking into a typed, bounded
+        ``PoolExhausted`` — and the budget re-arms after the raise."""
+        cfg, params = _setup_engine()
+        eng = ContinuousEngine(
+            cfg,
+            PoolConfig(max_slots=2, max_new=4, max_prompt=8, min_bucket=8,
+                       paged=True, block_size=4, exhaust_wait_steps=5),
+        )
+        echaos = EngineChaos(
+            eng, ChaosSchedule([block_pool_squeeze(0.0, 100.0, 1.0)])
+        )
+        req = eng.submit(_prompt(0, 4, cfg.vocab_size), 3,
+                         key=jax.random.PRNGKey(1))
+        eng._ensure(params)
+        echaos.apply(0.0)                    # every free block is held
+        with pytest.raises(PoolExhausted) as ei:
+            for _ in range(50):
+                eng.step(params)
+        exc = ei.value
+        assert exc.waited_steps == 6         # budget 5, raised on the 6th
+        assert exc.queued == 1
+        assert exc.free_slots == 2
+        assert exc.free_blocks == 0
+        assert exc.need_blocks == eng.blocks_needed(4, 3) > 0
+        assert "SLAScheduler" in str(exc)
+        # Budget re-armed: another full wait before the next raise.
+        with pytest.raises(PoolExhausted) as ei2:
+            for _ in range(50):
+                eng.step(params)
+        assert ei2.value.waited_steps == 6
+        # Release the squeeze and the very same queue drains normally.
+        echaos.release_all()
+        done = eng.run(params)
+        assert [r.rid for r in done] == [req.rid]
+        assert req.state == "completed"
+        assert req.tokens is not None and len(req.tokens) == 3
