@@ -51,6 +51,21 @@ high-priority hit-rate beats the unscheduled one.
     PYTHONPATH=src python -m benchmarks.serving_bench --sla \
         [--assert-all-terminal] [--assert-min-hi-hit-rate 0.6] \
         [--assert-scheduled-beats-unscheduled] [--out BENCH_serving_sla.json]
+
+``--sharded-serve`` is the mesh-scaling comparison: the same saturated
+mixed-length replay through ONE slot pool vs the sharded router
+(``repro.serve.router``) with an identically sized pool per device —
+token outputs are cross-checked identical between the arms, every shard
+must hold ``compiles == num_buckets + 1``, and a second phase runs the
+mixed-SLA virtual-time workload through the router-fronted scheduler.
+Emits ``BENCH_serving_sharded.json``; the aggregate-throughput gate
+needs real parallel devices (CI forces 4 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m benchmarks.serving_bench --sharded-serve \
+        [--num-shards N] [--assert-min-sharded-speedup 1.8] \
+        [--out BENCH_serving_sharded.json]
 """
 
 from __future__ import annotations
@@ -86,6 +101,7 @@ from repro.serve import (
     DecodeEngine,
     PoolConfig,
     PoolExhausted,
+    ShardedEngine,
     SLAScheduler,
     VirtualClock,
 )
@@ -465,13 +481,16 @@ def build_sla_workload(
 def _drive_sla_arm(
     cfg, params, pool: PoolConfig, items, chaos: ChaosSchedule,
     tokens: int, dt_step: float, base_key, scheduled: bool,
+    make_engine=None,
 ):
     """One virtual-time replay: submit arrivals as the clock passes them,
     one engine step + one ``dt_step`` advance per iteration, chaos applied
     at each step's virtual now.  Returns (per-item bookkeeping, engine,
-    scheduler)."""
+    scheduler).  ``make_engine`` swaps the engine under the same driver —
+    the sharded mode passes a ``ShardedEngine`` factory so the identical
+    workload runs through the router-fronted scheduler."""
     items = [dict(it) for it in sorted(items, key=lambda it: it["vt"])]
-    eng = ContinuousEngine(cfg, pool)
+    eng = make_engine() if make_engine else ContinuousEngine(cfg, pool)
     clock = VirtualClock()
     sched = None
     if scheduled:
@@ -480,19 +499,24 @@ def _drive_sla_arm(
             max_retries=256,
         )
         eng.attach_scheduler(sched)
-    # Warm every bucket + the decode step before the guarded replay (one
-    # request at a time: trivially admissible regardless of pool size).
-    for i, b in enumerate(sorted(
-            {eng.bucket_for(len(it["prompt"])) for it in items})):
-        p = next(it["prompt"] for it in items
-                 if eng.bucket_for(len(it["prompt"])) == b)
-        eng.submit(p, 1, key=jax.random.fold_in(base_key, 50_000 + i))
-        eng.run(params)
+    # Warm every bucket + the decode step before the guarded replay.  The
+    # router warms EVERY shard through its admit-and-preempt warm();
+    # the single engine warms through one throwaway request per bucket
+    # (trivially admissible regardless of pool size).
+    if hasattr(eng, "warm"):
+        eng.warm(params, [len(it["prompt"]) for it in items])
+    else:
+        for i, b in enumerate(sorted(
+                {eng.bucket_for(len(it["prompt"])) for it in items})):
+            p = next(it["prompt"] for it in items
+                     if eng.bucket_for(len(it["prompt"])) == b)
+            eng.submit(p, 1, key=jax.random.fold_in(base_key, 50_000 + i))
+            eng.run(params)
     echaos = EngineChaos(eng, chaos)
     i = 0
     exhausted = 0
     submitted = []
-    with no_recompile(engines=(eng,)):
+    with no_recompile(engines=(eng, *getattr(eng, "shards", ()))):
         for _ in range(200_000):
             now = clock.now
             echaos.apply(now)
@@ -526,7 +550,7 @@ def _drive_sla_arm(
                 clock.now = items[i]["vt"]       # idle skip-ahead
         else:
             raise RuntimeError("sla bench driver did not drain")
-    eng._harvest()
+    eng.harvest()
     return items, eng, sched, exhausted
 
 
@@ -651,6 +675,174 @@ def run_sla_bench(
     }
 
 
+# ---------------------------------------------------------------------------
+# --sharded-serve mode: one logical slot pool over the host mesh
+# ---------------------------------------------------------------------------
+
+
+def run_sharded_bench(
+    arch: str = "qwen1.5-0.5b",
+    n_requests: int = 24,
+    tokens: int = 8,
+    lengths=(5, 7, 11, 14),
+    loss_rate: float = 0.1,
+    channel: str = "ge",
+    seed: int = 0,
+    full_size: bool = False,
+    num_shards: int = 0,
+    span_s: float = 12.0,
+    dt_step: float = 0.25,
+) -> dict:
+    """Single slot pool vs the sharded router at EQUAL per-shard pool
+    size, plus a mixed-SLA Poisson workload through the router-fronted
+    scheduler.
+
+    Phase 1 (throughput): a saturated mixed-length replay through (a) one
+    ``ContinuousEngine`` and (b) a ``ShardedEngine`` with one identically
+    sized pool per device — same request keys, so the two arms must emit
+    IDENTICAL greedy tokens (cross-checked), and each shard must hold the
+    engine's compile contract (``compiles == num_buckets + 1``; the
+    replay itself runs under ``no_recompile``).  The aggregate-throughput
+    gate (``--assert-min-sharded-speedup``) needs real parallel devices —
+    CI forces them with ``--xla_force_host_platform_device_count``.
+
+    Phase 2 (SLA through the router): the ``--sla`` driver's virtual-time
+    Poisson workload (interactive / standard / batch classes), scheduler
+    attached to the ROUTER — per-class p50/p99 and deadline hit-rates
+    come out of the identical bookkeeping as the single-engine SLA bench.
+    """
+    import dataclasses
+
+    from repro.launch.mesh import host_devices
+
+    cfg = get_config(arch)
+    if not full_size:
+        cfg = cfg.reduced()
+    cfg = cfg.with_updates(
+        link=dataclasses.replace(cfg.link, loss_rate=loss_rate,
+                                 channel=channel),
+        attn_impl="flash_decode",
+    )
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    base_key = jax.random.PRNGKey(seed)
+    devices = host_devices()
+    if num_shards:
+        devices = [devices[i % len(devices)] for i in range(num_shards)]
+
+    rng = np.random.RandomState(seed)
+    prompts = [
+        rng.randint(0, cfg.vocab_size,
+                    size=(int(lengths[i % len(lengths)]),)).astype(np.int32)
+        for i in range(n_requests)
+    ]
+    pool = PoolConfig(
+        max_slots=4, max_new=max(8, tokens),
+        max_prompt=max(int(max(lengths)), 8),
+    )
+
+    # ---- single-pool arm (equal per-shard size) ---------------------------
+    single = ContinuousEngine(cfg, pool)
+    reqs_single, wall_single = _replay(single, params, prompts, tokens,
+                                       base_key)
+    assert single.compiles == single.num_buckets + 1, (
+        single.compiles, single.num_buckets
+    )
+
+    # ---- sharded arm ------------------------------------------------------
+    sharded = ShardedEngine(cfg, pool, devices=devices)
+    sharded.warm(params, [len(p) for p in prompts])
+    t0 = time.perf_counter()
+    with no_recompile(engines=(sharded, *sharded.shards)):
+        reqs_sharded = [
+            sharded.submit(p, tokens, key=jax.random.fold_in(base_key, i))
+            for i, p in enumerate(prompts)
+        ]
+        sharded.run(params)
+    wall_sharded = time.perf_counter() - t0
+    for i, sh in enumerate(sharded.shards):
+        assert sh.compiles == sh.num_buckets + 1, (
+            i, sh.compiles, sh.num_buckets
+        )
+    # Same keys -> placement-invariant greedy outputs: the router must
+    # emit exactly the single pool's tokens, whatever shard served each.
+    for rs, rr in zip(reqs_single, reqs_sharded):
+        np.testing.assert_array_equal(rs.tokens, rr.tokens)
+
+    tps_single = n_requests * tokens / wall_single
+    tps_sharded = n_requests * tokens / wall_sharded
+    shard_stats = sharded.stats()
+
+    # ---- SLA workload through the router-fronted scheduler ----------------
+    chaos = ChaosSchedule([])
+    items = build_sla_workload(
+        n_requests, span_s, chaos, cfg.vocab_size,
+        sla_classes(tokens, dt_step), seed=seed,
+    )
+    pool_sla = PoolConfig(
+        max_slots=2, max_new=max(8, tokens), max_prompt=8, min_bucket=8,
+        paged=True, block_size=4, exhaust_wait_steps=64,
+    )
+    booked, eng_sla, sched, _ = _drive_sla_arm(
+        cfg, params, pool_sla, items, chaos, tokens, dt_step, base_key,
+        scheduled=True,
+        make_engine=lambda: ShardedEngine(cfg, pool_sla, devices=devices),
+    )
+    served = [it for it in booked if not it["dropped"]]
+    for i, sh in enumerate(eng_sla.shards):
+        assert sh.compiles == sh.num_buckets + 1, (
+            i, sh.compiles, sh.num_buckets
+        )
+
+    return {
+        "bench": "serving_sharded",
+        "arch": arch,
+        "n_requests": n_requests,
+        "tokens": tokens,
+        "num_shards": sharded.num_shards,
+        "devices": [str(d) for d in devices],
+        "prompt_lengths": sorted(set(int(len(p)) for p in prompts)),
+        "loss_rate": loss_rate,
+        "channel": channel,
+        "backend": jax.default_backend(),
+        "pool_per_shard": {
+            "max_slots": pool.max_slots, "max_new": pool.max_new,
+            "max_prompt": pool.max_prompt,
+        },
+        "single": {
+            "tokens_per_s": tps_single,
+            "wall_s": wall_single,
+            "compiles": single.compiles,
+            "num_buckets": single.num_buckets,
+        },
+        "sharded": {
+            "tokens_per_s": tps_sharded,
+            "wall_s": wall_sharded,
+            "compiles_total": sharded.compiles,
+            "per_shard": {
+                f"shard{i}": {
+                    "compiles": sh.compiles,
+                    "num_buckets": sh.num_buckets,
+                    "placements": sharded.placement_counts[i],
+                }
+                for i, sh in enumerate(sharded.shards)
+            },
+            **{k: v for k, v in shard_stats.items()
+               if not k.startswith("shard")},
+        },
+        "sharded_speedup": tps_sharded / max(tps_single, 1e-9),
+        "tokens_identical_across_arms": True,
+        "sla_through_router": {
+            "classes": _sla_class_summary(booked),
+            "all_terminal": all(it["req"].terminal for it in served),
+            "preemptions": sched.stats["preemptions"],
+            "resumes": sched.stats["resumes"],
+            "expired": sched.stats["expired"],
+            "rejected": sched.stats["rejected"],
+            "placements_per_shard": list(eng_sla.placement_counts),
+        },
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=sorted(ARCHITECTURES))
@@ -676,6 +868,25 @@ def main():
         "--assert-min-sustained-ratio", type=float, default=None,
         help="[--paged] fail unless paged sustains >= RATIO x the "
              "contiguous engine's median in-flight requests",
+    )
+    ap.add_argument(
+        "--sharded-serve", action="store_true",
+        help="sharded-router mode: single pool vs one pool per device at "
+             "equal per-shard size (cross-checked token-identical), plus "
+             "the mixed-SLA workload through the router-fronted scheduler "
+             "(writes BENCH_serving_sharded.json by default)",
+    )
+    ap.add_argument(
+        "--num-shards", type=int, default=0,
+        help="[--sharded-serve] shard count (0 = one per visible device; "
+             "force devices with XLA_FLAGS="
+             "--xla_force_host_platform_device_count=N)",
+    )
+    ap.add_argument(
+        "--assert-min-sharded-speedup", type=float, default=None,
+        help="[--sharded-serve] fail unless the sharded arm's aggregate "
+             "tokens/s is >= RATIO x the single pool's (needs real "
+             "parallel devices — a CI gate, meaningless on one core)",
     )
     ap.add_argument(
         "--sla", action="store_true",
@@ -729,7 +940,8 @@ def main():
     args = ap.parse_args()
     if args.out is None:
         args.out = (
-            "BENCH_serving_sla.json" if args.sla
+            "BENCH_serving_sharded.json" if args.sharded_serve
+            else "BENCH_serving_sla.json" if args.sla
             else "BENCH_serving_paged.json" if args.paged
             else "BENCH_serving.json"
         )
@@ -740,6 +952,48 @@ def main():
         import os
 
         os.makedirs(args.obs_dir, exist_ok=True)
+
+    if args.sharded_serve:
+        result = run_sharded_bench(
+            arch=args.arch,
+            n_requests=args.clients,
+            tokens=8 if args.smoke else args.tokens,
+            full_size=args.full_size,
+            num_shards=args.num_shards,
+            span_s=args.span,
+            dt_step=args.dt_step,
+        )
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        sh, sg = result["sharded"], result["single"]
+        sla = result["sla_through_router"]
+        logger.info(
+            f"serving_bench --sharded-serve[{result['arch']} "
+            f"reqs={result['n_requests']} shards={result['num_shards']}]: "
+            f"single {sg['tokens_per_s']:.1f} tok/s "
+            f"({sg['compiles']} compiles) -> sharded "
+            f"{sh['tokens_per_s']:.1f} tok/s "
+            f"({result['sharded_speedup']:.2f}x, per-shard compiles "
+            + "/".join(str(v["compiles"])
+                       for v in sh["per_shard"].values())
+            + f") | SLA via router: preempt {sla['preemptions']}, "
+            f"resume {sla['resumes']}, placements "
+            f"{sla['placements_per_shard']} -> {args.out}"
+        )
+        ok = True
+        if args.assert_min_sharded_speedup is not None and \
+                result["sharded_speedup"] < args.assert_min_sharded_speedup:
+            logger.error(
+                f"ASSERT FAILED: sharded speedup "
+                f"{result['sharded_speedup']:.2f}x < "
+                f"{args.assert_min_sharded_speedup}"
+            )
+            ok = False
+        if not result["sla_through_router"]["all_terminal"]:
+            logger.error("ASSERT FAILED: some router-scheduled requests "
+                         "never resolved terminally")
+            ok = False
+        raise SystemExit(0 if ok else 1)
 
     if args.sla:
         result = run_sla_bench(

@@ -17,9 +17,10 @@
 |        | the engines' steady-state step functions                          |
 | RPA006 | structured logging: no bare ``print(`` outside benchmarks/        |
 |        | examples/scripts (use ``repro.obs.get_logger``)                   |
-| RPA007 | host scheduler/chaos layer discipline: ``serve/scheduler.py`` and |
-|        | ``net/chaos.py`` stay on the engine's public host API — no jitted |
-|        | engine internals, no device syncs outside the sanctioned points   |
+| RPA007 | host scheduler/chaos/router layer discipline:                     |
+|        | ``serve/scheduler.py``, ``serve/router.py``, and ``net/chaos.py`` |
+|        | stay on the engine's public host API — no jitted engine           |
+|        | internals, no device syncs outside the sanctioned points          |
 
 Rules are heuristic by design: they encode this repo's conventions (which
 factories are sanctioned, which files are the kernel layer), favor few
@@ -688,15 +689,21 @@ def rule_hidden_host_sync(ctx: ModuleContext) -> None:
 # RPA007 — host scheduler/chaos layer discipline
 # ---------------------------------------------------------------------------
 
-# The SLA scheduler and the chaos harness are pure HOST layers over the
-# continuous engine: they read host mirrors and drive admission through
-# the public API (try_admit / preempt_slot / running_slots / blocks_held /
-# free_block_count / blocks_needed).  The whole design depends on that:
-# a scheduler that touches jitted engine internals can silently add a
-# per-step host sync or an XLA build, breaking the zero-steady-state-
-# recompile and compile-count contracts without any test noticing until
-# the guard trips in CI.  This rule pins the boundary statically.
-_HOST_LAYER_FILES = ("repro/serve/scheduler.py", "repro/net/chaos.py")
+# The SLA scheduler, the chaos harness, and the sharded-serving router
+# are pure HOST layers over the continuous engine: they read host
+# mirrors and drive admission through the public API (try_admit /
+# preempt_slot / running_slots / blocks_held / free_block_count /
+# blocks_needed).  The whole design depends on that: a scheduler — or a
+# router placing requests across per-device shards — that touches
+# jitted engine internals can silently add a per-step host sync or an
+# XLA build, breaking the zero-steady-state-recompile and per-shard
+# compile-count contracts without any test noticing until the guard
+# trips in CI.  This rule pins the boundary statically.
+_HOST_LAYER_FILES = (
+    "repro/serve/scheduler.py",
+    "repro/serve/router.py",
+    "repro/net/chaos.py",
+)
 # Engine members that are (or lead to) compiled-program / device-state
 # machinery.  NOT listed: ``_free_blocks`` — the host-side block
 # allocator IS the chaos squeeze's sanctioned surface (documented in
@@ -708,8 +715,8 @@ _ENGINE_INTERNALS = {
 }
 
 
-@_rule("RPA007", "host scheduler/chaos layer reaching into jitted engine "
-                 "internals or forcing device syncs")
+@_rule("RPA007", "host scheduler/chaos/router layer reaching into jitted "
+                 "engine internals or forcing device syncs")
 def rule_host_layer_discipline(ctx: ModuleContext) -> None:
     if not ctx.path.endswith(_HOST_LAYER_FILES):
         return

@@ -1,5 +1,24 @@
-"""Production mesh construction (TPU v5e pods; CPU placeholder devices for
-the dry-run).
+"""Mesh builders for the sharded trainer and the sharded serving router.
+
+``make_host_mesh`` is the local entry point: it builds a ``("data",
+"model")`` mesh over the host's devices.  For CPU CI the host normally
+exposes ONE device, so multi-device paths (sharded scan-epoch training,
+the slot-pool router) force a deterministic N-device host with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+which must be set BEFORE the JAX backend initializes (i.e. in the job /
+subprocess environment, not from test code after ``import jax``).  Two
+overrides pick which of those devices the mesh uses:
+
+* ``devices=`` — an explicit device sequence (the sharded-serve bench
+  uses this to build equal-sized single-shard and N-shard arms);
+* ``REPRO_HOST_DEVICES=N`` — environment override taking the first N
+  of ``jax.devices()`` (CI jobs pin the mesh width without code changes).
+
+Both fail loudly — ``ValueError``, not a silent fallback — when the
+request cannot be satisfied or the requested ``model_axis`` does not
+divide the device count.
 
 Functions, not module-level constants, so importing this module never
 touches jax device state.
@@ -7,7 +26,13 @@ touches jax device state.
 
 from __future__ import annotations
 
+import os
+from typing import Optional, Sequence
+
 import jax
+import numpy as np
+
+HOST_DEVICES_ENV = "REPRO_HOST_DEVICES"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,8 +42,53 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model_axis: int = 1):
-    """Degenerate mesh over the locally available devices (tests/examples)."""
-    n = jax.device_count()
-    assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+def host_devices(devices: Optional[Sequence] = None):
+    """The device list host meshes (and the serving router) span.
+
+    ``devices=`` wins; otherwise ``$REPRO_HOST_DEVICES`` selects the first
+    N of ``jax.devices()``; otherwise every device.  Raises ``ValueError``
+    when more devices are requested than the backend exposes (the usual
+    cause: ``--xla_force_host_platform_device_count`` missing from
+    ``XLA_FLAGS``, or set after the backend already initialized).
+    """
+    if devices is not None:
+        devices = list(devices)
+        if not devices:
+            raise ValueError("host_devices: empty explicit device list")
+        return devices
+    devices = list(jax.devices())
+    want = int(os.environ.get(HOST_DEVICES_ENV, "0") or 0)
+    if want < 0:
+        raise ValueError(f"{HOST_DEVICES_ENV}={want} must be >= 0")
+    if want:
+        if want > len(devices):
+            raise ValueError(
+                f"{HOST_DEVICES_ENV}={want} but the backend only exposes "
+                f"{len(devices)} device(s) — set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={want} in the "
+                "environment BEFORE the JAX backend initializes"
+            )
+        devices = devices[:want]
+    return devices
+
+
+def make_host_mesh(model_axis: int = 1, *, devices: Optional[Sequence] = None):
+    """``("data", "model")`` mesh over :func:`host_devices`.
+
+    ``model_axis`` must divide the device count exactly; a remainder is a
+    hard error (a silently-truncated mesh would desync the pspecs derived
+    from it in ``sharding/rules.py``).
+    """
+    devices = host_devices(devices)
+    n = len(devices)
+    if model_axis < 1:
+        raise ValueError(f"model_axis={model_axis} must be >= 1")
+    if n % model_axis:
+        raise ValueError(
+            f"model_axis={model_axis} does not divide the {n} available "
+            f"device(s) {[str(d) for d in devices]} — pick a divisor or "
+            f"adjust {HOST_DEVICES_ENV} / "
+            "--xla_force_host_platform_device_count"
+        )
+    grid = np.array(devices, dtype=object).reshape(n // model_axis, model_axis)
+    return jax.sharding.Mesh(grid, ("data", "model"))

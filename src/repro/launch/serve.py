@@ -82,6 +82,7 @@ def generate(
     channel: str | None = None,
     temperature: float = 1.0,
     engine=None,
+    num_shards: int = 0,
 ):
     """Returns (generated (B, num_tokens), timings dict).
 
@@ -89,19 +90,34 @@ def generate(
     engine — per request ``i``, greedy output is token-for-token identical
     to ``generate_reference(prompts[i:i+1], key=fold_in(key, i))``, and
     the pool's AOT programs make repeated calls compile nothing new
-    (``timings['compiles']``/``timings['traces']``).  With an explicit
-    ``DecodeEngine`` (or sampling), the whole-generation scan engine
-    serves the batch under its legacy joint-mask semantics, token-exact
-    against ``generate_reference`` at the same batch under the same key.
+    (``timings['compiles']``/``timings['traces']``).  ``num_shards > 1``
+    rides the sharded router instead (``repro.serve.router``): one slot
+    pool per device with occupancy-aware placement — same per-request
+    token-identity contract, aggregate throughput scales with devices.
+    With an explicit ``DecodeEngine`` (or sampling), the whole-generation
+    scan engine serves the batch under its legacy joint-mask semantics,
+    token-exact against ``generate_reference`` at the same batch under
+    the same key.
     """
     cfg = _override_link(cfg, loss_rate=loss_rate, channel=channel)
-    from repro.serve import ContinuousEngine, continuous
+    from repro.serve import ContinuousEngine, ShardedEngine, continuous
+    from repro.serve import router as router_lib
+    from repro.serve.continuous import PoolConfig, pow2_bucket
 
+    if engine is None and greedy and not cfg.frontend and num_shards > 1:
+        engine = router_lib.sharded_engine(
+            cfg,
+            PoolConfig(
+                max_prompt=pow2_bucket(prompts.shape[1]),
+                max_new=pow2_bucket(num_tokens, 16),
+            ),
+            num_shards=num_shards,
+        )
     if engine is None and greedy and not cfg.frontend:
         # Frontend (VLM/audio) configs need an extra embed input the slot
         # pool doesn't carry yet — they stay on the whole-generation engine.
         engine = continuous.engine_for(cfg, prompts.shape[1], num_tokens)
-    if isinstance(engine, ContinuousEngine):
+    if isinstance(engine, (ContinuousEngine, ShardedEngine)):
         tokens, timings = engine.generate_batch(
             params, prompts, num_tokens,
             key=key if key is not None else jax.random.PRNGKey(0),
@@ -227,6 +243,13 @@ def main():
         "naive keeps the full-cache oracle",
     )
     ap.add_argument("--full-size", action="store_true")
+    ap.add_argument(
+        "--num-shards", type=int, default=0,
+        help="serve through the sharded router with this many per-device "
+        "slot-pool shards (0/1 = single engine); shards wrap around the "
+        "visible devices — force more with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -241,7 +264,7 @@ def main():
     )
     toks, timings = generate(
         params, cfg, prompts, args.tokens, loss_rate=args.loss_rate, key=key,
-        channel=args.channel,
+        channel=args.channel, num_shards=args.num_shards,
     )
     log = get_logger("repro.launch.serve")
     log.info(f"generated: {np.asarray(toks)[:, :10]} ...")

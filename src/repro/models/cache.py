@@ -71,12 +71,20 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
 # requests join and retire without retracing.
 
 
-def init_slot_pool(cfg: ModelConfig, n_slots: int, max_seq: int) -> Dict[str, Any]:
-    """Zeros-initialized pool of ``n_slots`` batch-1 decode states."""
+def init_slot_pool(
+    cfg: ModelConfig, n_slots: int, max_seq: int, device=None
+) -> Dict[str, Any]:
+    """Zeros-initialized pool of ``n_slots`` batch-1 decode states.
+
+    ``device`` places the fresh pool on one specific device as COMMITTED
+    arrays — the sharded serving router builds one pool per mesh device,
+    and committed state is what keeps every later donated dispatch pinned
+    to that shard instead of following the default device."""
     one = cache_spec(cfg, 1, max_seq)
-    return jax.tree_util.tree_map(
+    pool = jax.tree_util.tree_map(
         lambda s: jnp.zeros((n_slots,) + tuple(s.shape), s.dtype), one
     )
+    return pool if device is None else jax.device_put(pool, device)
 
 
 def write_slot(pool: Dict[str, Any], slot_cache: Dict[str, Any], slot) -> Dict[str, Any]:
@@ -139,7 +147,7 @@ def blocks_for(rows: int, block_size: int) -> int:
 
 
 def init_block_pool(
-    cfg: ModelConfig, num_blocks: int, block_size: int
+    cfg: ModelConfig, num_blocks: int, block_size: int, device=None
 ) -> Dict[str, Any]:
     """Zeros-initialized global block pool for an attention-only stack.
 
@@ -149,6 +157,10 @@ def init_block_pool(
     rotating write index wraps at the layer's own length, and the padded
     tail rows of the last block are inert (never written, and the
     ``k_pos < n_valid`` mask keeps them out of every softmax).
+
+    ``device=`` commits the pool to one device (sharded serving builds one
+    pool per shard; committed arrays keep every donated dispatch on that
+    shard).
     """
     for spec in cfg.all_layers():
         if spec.kind != "attn":
@@ -182,7 +194,8 @@ def init_block_pool(
         )
         for _ in cfg.unit_pattern
     ]
-    return {"prologue": prologue, "units": units}
+    pool = {"prologue": prologue, "units": units}
+    return pool if device is None else jax.device_put(pool, device)
 
 
 def block_pool_spec(cfg: ModelConfig, num_blocks: int, block_size: int):

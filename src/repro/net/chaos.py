@@ -145,7 +145,11 @@ class _OverrideChannel:
 
 
 class EngineChaos:
-    """Applies pool-level faults to a live ``ContinuousEngine``.
+    """Applies pool-level faults to a live ``ContinuousEngine`` — or to a
+    sharded ``repro.serve.router.ShardedEngine``, where the squeeze hits
+    EVERY shard's allocator at the scheduled fraction (a co-tenant claims
+    HBM on each device; the router's occupancy placement then steers
+    admissions toward whichever shard has free blocks left).
 
     Call ``apply(now)`` between engine steps (the serving-bench driver and
     ``make_sim_server`` do).  Only the host-side block allocator is
@@ -156,13 +160,25 @@ class EngineChaos:
     def __init__(self, engine, schedule: ChaosSchedule):
         self.engine = engine
         self.schedule = schedule
+        # A router is a fleet: one sub-harness per shard so each shard's
+        # hold list tracks its own allocator.
+        shards = getattr(engine, "shards", None)
+        self._sub: List["EngineChaos"] = [
+            EngineChaos(sh, schedule) for sh in shards
+        ] if shards is not None else []
         self._held: List[int] = []
 
     @property
     def held_blocks(self) -> int:
+        if self._sub:
+            return sum(s.held_blocks for s in self._sub)
         return len(self._held)
 
     def apply(self, now: float) -> None:
+        if self._sub:
+            for s in self._sub:
+                s.apply(now)
+            return
         eng = self.engine
         if not eng.pool.paged:
             return
@@ -182,5 +198,7 @@ class EngineChaos:
                 eng._free_blocks.append(self._held.pop())
 
     def release_all(self) -> None:
+        for s in self._sub:
+            s.release_all()
         while self._held:
             self.engine._free_blocks.append(self._held.pop())

@@ -12,6 +12,11 @@ Two engines over the step builders in ``repro.launch.steps``:
   exactly two kinds of AOT programs (bucketed prefill + one fused decode
   step), so heterogeneous live traffic runs with zero steady-state
   recompiles.  This is what ``launch.serve.generate`` rides by default.
+
+Plus the sharded front (``repro.serve.router``): ``ShardedEngine`` runs
+one ``ContinuousEngine`` per mesh device behind an occupancy-aware
+router that exposes the same engine surface — ``SLAScheduler`` and the
+chaos harness sit in front of the routed fleet unchanged.
 """
 
 from repro.serve.engine import (  # noqa: F401
@@ -33,6 +38,11 @@ from repro.serve.continuous import (  # noqa: F401
     padding_safe,
     pool_engine,
     pow2_bucket,
+)
+from repro.serve.router import (  # noqa: F401
+    ShardedEngine,
+    clear_routers,
+    sharded_engine,
 )
 from repro.serve.scheduler import (  # noqa: F401
     SLA,

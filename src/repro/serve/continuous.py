@@ -60,6 +60,7 @@ compile contracts as above; see ``_make_paged_decode_step``.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import math
 import time
@@ -222,6 +223,45 @@ class PoolExhausted(RuntimeError):
         )
 
 
+def build_request(
+    eng, rid: int, prompt, max_tokens: int,
+    key: Optional[jax.Array] = None, sla: Optional[SLA] = None,
+) -> Request:
+    """Validate + construct one :class:`Request` against ``eng``'s pool
+    limits.  Shared by ``ContinuousEngine.submit`` and the sharded
+    router's submit (``repro.serve.router``): the router keeps its own
+    rid namespace and queue but admits against identical per-shard
+    pools, so the limits — and the impossible-request rejection — are
+    the same.  ``eng`` only needs ``.pool`` and ``.blocks_needed``."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    pool = eng.pool
+    assert 1 <= prompt.size <= pool.max_prompt, (
+        prompt.size, pool.max_prompt
+    )
+    assert 1 <= max_tokens <= pool.max_new, (max_tokens, pool.max_new)
+    if pool.paged:
+        # Reject impossible requests at submission: admission blocks
+        # head-of-line on a full pool (progress is guaranteed because
+        # live requests retire), but a request needing more blocks than
+        # the pool HAS would deadlock the queue forever.
+        need = eng.blocks_needed(prompt.size, int(max_tokens))
+        cap = pool.total_blocks - 1
+        if need > cap:
+            raise ValueError(
+                f"request needs {need} pool blocks (prompt {prompt.size}, "
+                f"max_tokens {max_tokens}, block_size "
+                f"{pool.block_size}) but the pool only has {cap} "
+                "allocatable blocks — it could never be admitted"
+            )
+    if key is None:
+        key = jax.random.PRNGKey(rid)
+    return Request(
+        rid=rid, prompt=prompt, max_tokens=int(max_tokens),
+        key=jnp.asarray(key, jnp.uint32), t_submit=time.perf_counter(),
+        sla=sla,
+    )
+
+
 class ContinuousEngine:
     """Slot-pooled continuous-batching engine for one model config.
 
@@ -241,6 +281,7 @@ class ContinuousEngine:
         cfg: ModelConfig,
         pool: Optional[PoolConfig] = None,
         attn_impl: Optional[str] = None,
+        device=None,
     ):
         assert not cfg.frontend, (
             "frontend (VLM/audio) configs are not supported by the slot-pool "
@@ -250,6 +291,14 @@ class ContinuousEngine:
             cfg = cfg.with_updates(attn_impl=attn_impl)
         self.cfg = cfg
         self.pool = pool or PoolConfig()
+        # ``device`` pins THIS engine's slot pool and all of its AOT
+        # executables to one device — the sharded router
+        # (``repro.serve.router``) builds one engine per mesh device so a
+        # logical pool spans the host mesh.  None keeps the default-device
+        # behavior (single-device engines are unchanged).
+        self.device = device
+        self._placed_params = None
+        self._placed_params_id: Optional[int] = None
         if self.pool.paged:
             bad = sorted(
                 {s.kind for s in cfg.all_layers() if s.kind != "attn"}
@@ -282,6 +331,12 @@ class ContinuousEngine:
         # when attached, submit() routes into its ready queue and step()
         # calls its tick() in place of FIFO admission.
         self.scheduler = None
+        # Completion sink: an object whose on_complete(engine, req) fires
+        # at the completion sync point WITHOUT this engine ticking it.
+        # The sharded router installs its scheduler here on every shard —
+        # admission routes through the router (placement), but deadline-hit
+        # accounting still needs the per-shard completion stamp.
+        self.completion_sink = None
         self._stalled_steps = 0
         # Paged-pool host allocator: block 0 is the reserved trash block
         # and is never handed out; free list is LIFO so a freed request's
@@ -309,28 +364,55 @@ class ContinuousEngine:
 
     # -- static program construction --------------------------------------
 
+    def _dev_ctx(self):
+        """Context placing array creation AND AOT lowering on this
+        engine's device (no-op for the default single-device engine)."""
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
+
+    def _params_for(self, params):
+        """Per-device parameter copy, cached by identity: a device-pinned
+        engine must not re-upload the (large) params every dispatch, and
+        its ``Compiled`` executables expect inputs resident on its own
+        device.  The default engine passes params through untouched."""
+        if self.device is None:
+            return params
+        if self._placed_params_id != id(params):
+            self._placed_params = jax.device_put(params, self.device)
+            self._placed_params_id = id(params)
+        return self._placed_params
+
     def _aot(self, fn, donate: Tuple[int, ...], avals: Tuple) -> Any:
         """jit -> lower -> compile; returns the Compiled executable and
-        bumps the engine-wide compile/trace accounting."""
+        bumps the engine-wide compile/trace accounting.  Lowering runs
+        under ``_dev_ctx`` so a device-pinned engine's executables target
+        its own device (AOT avals carry no placement of their own)."""
 
         def traced(*args):
             self.traces += 1     # Python side effect: fires at trace time
             return fn(*args)
 
         t0 = time.perf_counter()
-        compiled = jax.jit(traced, donate_argnums=donate).lower(*avals).compile()
+        with self._dev_ctx():
+            compiled = jax.jit(
+                traced, donate_argnums=donate
+            ).lower(*avals).compile()
         self.compile_s += time.perf_counter() - t0
         self.compiles += 1
         return compiled
 
     def _init_state(self) -> Dict[str, Any]:
+      with self._dev_ctx():
         p = self.pool
         if p.paged:
             cache = cache_lib.init_block_pool(
-                self.cfg, p.total_blocks, p.block_size
+                self.cfg, p.total_blocks, p.block_size, device=self.device
             )
         else:
-            cache = cache_lib.init_slot_pool(self.cfg, p.max_slots, p.max_seq)
+            cache = cache_lib.init_slot_pool(
+                self.cfg, p.max_slots, p.max_seq, device=self.device
+            )
         state = {
             "cache": cache,
             "token": jnp.zeros((p.max_slots, 1, 1), jnp.int32),
@@ -353,6 +435,11 @@ class ContinuousEngine:
             state["block_table"] = jnp.zeros(
                 (p.max_slots, p.blocks_per_slot), jnp.int32
             )
+        if self.device is not None:
+            # Commit the whole tree (``default_device`` only places,
+            # commitment keeps follow-the-data dispatches — e.g. the
+            # deaden-slot scatter — on THIS shard's device).
+            state = jax.device_put(state, self.device)
         return state
 
     def _make_decode_step(self):
@@ -723,34 +810,7 @@ class ContinuousEngine:
         sla: Optional[SLA] = None,
     ) -> Request:
         """Queue one request; returns its handle (filled in by run())."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        assert 1 <= prompt.size <= self.pool.max_prompt, (
-            prompt.size, self.pool.max_prompt
-        )
-        assert 1 <= max_tokens <= self.pool.max_new, (
-            max_tokens, self.pool.max_new
-        )
-        if self.pool.paged:
-            # Reject impossible requests at submission: admission blocks
-            # head-of-line on a full pool (progress is guaranteed because
-            # live requests retire), but a request needing more blocks than
-            # the pool HAS would deadlock the queue forever.
-            need = self.blocks_needed(prompt.size, int(max_tokens))
-            cap = self.pool.total_blocks - 1
-            if need > cap:
-                raise ValueError(
-                    f"request needs {need} pool blocks (prompt {prompt.size}, "
-                    f"max_tokens {max_tokens}, block_size "
-                    f"{self.pool.block_size}) but the pool only has {cap} "
-                    "allocatable blocks — it could never be admitted"
-                )
-        if key is None:
-            key = jax.random.PRNGKey(self._rid)
-        req = Request(
-            rid=self._rid, prompt=prompt, max_tokens=int(max_tokens),
-            key=jnp.asarray(key, jnp.uint32), t_submit=time.perf_counter(),
-            sla=sla,
-        )
+        req = build_request(self, self._rid, prompt, max_tokens, key, sla)
         self._rid += 1
         if self.scheduler is not None:
             self.scheduler.enqueue(req)
@@ -758,6 +818,20 @@ class ContinuousEngine:
             self._queue.append(req)
         obs.registry().counter("serve.requests_submitted").inc()
         return req
+
+    def harvest(self) -> None:
+        """Read every finished-but-unread output row to the host (one
+        device sync for the whole batch).  Public for router/driver use;
+        run() calls it at drain."""
+        self._harvest()
+
+    def take_finished(self) -> List[Request]:
+        """Harvest, then hand over (and clear) the finished-request list.
+        The sharded router merges these across shards; run() is the
+        single-engine wrapper around the same drain."""
+        self._harvest()
+        done, self._finished = self._finished, []
+        return done
 
     def _harvest(self) -> None:
         if not self._pending_harvest:
@@ -821,6 +895,11 @@ class ContinuousEngine:
         not enough free blocks.  The scheduler's tick() probes candidates
         in ITS order through this; FIFO _admit() probes only the head."""
         p = self.pool
+        # A router-fronted shard sees try_admit before any step(): make
+        # sure the pool exists, and dispatch against this shard's own
+        # parameter copy (no-ops for the default single-device engine).
+        self._ensure(params)
+        params = self._params_for(params)
         if not self._free:
             return False
         need = 0
@@ -950,6 +1029,7 @@ class ContinuousEngine:
 
     def _decode_once(self, params) -> None:
         self.active_per_step.append(self.active)
+        params = self._params_for(params)
         self._state = self._decode_fn(params, self._state)
         self.steps += 1
         completed = []
@@ -984,10 +1064,11 @@ class ContinuousEngine:
                 req.state = "completed"
                 self._pending_harvest.append((slot, req))
                 self._finished.append(req)
-                if self.scheduler is not None:
+                sched = self.scheduler or self.completion_sink
+                if sched is not None:
                     # Deadline-hit accounting rides the sanctioned
                     # completion sync above — no extra device read.
-                    self.scheduler.on_complete(self, req)
+                    sched.on_complete(self, req)
 
     def step(self, params) -> None:
         """One engine tick: admit (scheduler tick when one is attached,
@@ -1034,10 +1115,9 @@ class ContinuousEngine:
                 self.scheduler is not None and self.scheduler.pending
             ):
                 self.step(params)
-            self._harvest()
+            done = self.take_finished()
         if reg.enabled:
             self.publish_device_counters(reg)
-        done, self._finished = self._finished, []
         return done
 
     def device_counters(self) -> Dict[str, float]:

@@ -34,6 +34,11 @@ The scheduler is a pure **host** layer: it reads the engine's host
 mirrors through the public API (``try_admit`` / ``preempt_slot`` /
 ``running_slots`` / ``free_block_count``) and never touches device state
 or forces a sync — RPA007 (``repro.analysis``) enforces this statically.
+Because that surface is all it probes, the sharded router
+(``repro.serve.router.ShardedEngine``) fronts it unchanged: ``tick()``
+sees one logical pool with globally-numbered slots, preemption forwards
+to the owning shard, and a preempted request may resume on a different
+shard (token-identical — the keyed math is placement-invariant).
 All obs counters/gauges (``sched.preemptions``, ``sched.expired``,
 ``sched.resumes``, per-class ``sched.deadline_hit_rate.*``) are stamped
 at the engine's existing sync points, so the zero-steady-state-recompile

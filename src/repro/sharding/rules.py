@@ -261,3 +261,25 @@ def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def pool_shard_devices(mesh: Mesh) -> list:
+    """Device list the sharded serving router builds per-shard slot pools
+    over: one shard per data-axis step of ``mesh``, in data-major order.
+
+    The slot axis is a *data* axis (independent batch-1 requests), so the
+    router shards it over the mesh's data-like axes only; a ``model`` axis
+    wider than 1 would mean tensor-parallel shards, which the per-shard
+    ``Compiled``-executable design does not cover yet — refuse loudly
+    instead of silently serving from a mis-shaped pool.  Each returned
+    device hosts one full ``ContinuousEngine`` slot/block pool (the
+    cache layout per shard is exactly the single-device layout that
+    :func:`cache_pspecs` replicates along these axes).
+    """
+    if "model" in mesh.axis_names and mesh.shape["model"] != 1:
+        raise ValueError(
+            f"sharded serving shards the slot (data) axis only; mesh has "
+            f"model axis of size {mesh.shape['model']} — build the host "
+            "mesh with model_axis=1 for the serving router"
+        )
+    return list(mesh.devices.flat)

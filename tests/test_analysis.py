@@ -399,9 +399,48 @@ class TestHostLayerDiscipline:
                 engine._free_blocks.append(engine._free_blocks.pop())
         """, path="src/repro/net/chaos.py", select=["RPA007"]) == []
 
+    def test_router_engine_internal_access_flags(self):
+        """The sharded router is host-layer too: reaching into a shard's
+        AOT internals is exactly the discipline breach RPA007 exists
+        for."""
+        assert codes("""
+            def _place(self, req):
+                return self.shards[0]._state["lengths"]
+        """, path="src/repro/serve/router.py",
+            select=["RPA007"]) == ["RPA007"]
+
+    def test_router_sync_call_flags(self):
+        assert codes("""
+            import numpy as np
+            def queue_depth(self, req):
+                return np.asarray(req.prompt)
+        """, path="src/repro/serve/router.py",
+            select=["RPA007"]) == ["RPA007"]
+
+    def test_router_public_surface_clean(self):
+        """The real router drives shards through the public engine API
+        only (occupancy probes + try_admit/preempt_slot) — that surface
+        stays silent."""
+        assert codes("""
+            def _place(self, req):
+                best = None
+                for i, sh in enumerate(self.shards):
+                    if sh.free_slot_count <= 0:
+                        continue
+                    if sh.free_block_count() < self.blocks_needed(
+                            req.prompt.size, req.max_tokens):
+                        continue
+                    best = i
+                return best
+
+            def preempt_slot(self, gslot):
+                shard_idx, local = self._locate(gslot)
+                return self.shards[shard_idx].preempt_slot(local)
+        """, path="src/repro/serve/router.py", select=["RPA007"]) == []
+
     def test_other_files_exempt(self):
         """The engine itself owns its internals; the rule only polices
-        the host scheduling/chaos layer."""
+        the host scheduling/chaos/router layer."""
         assert codes("""
             def step(self, params):
                 self._state = self._decode_fn(params, self._state)

@@ -672,3 +672,69 @@ class TestSimulatorObs:
         rep = run_sim(SimConfig(n_clients=2, duration_s=1.0, seed=0))
         assert rep.latency_p50_s >= 0.0
         assert len(reg.events) == before
+
+
+# ---------------------------------------------------------------------------
+# Router observability: per-shard occupancy gauges vs the host oracle
+# ---------------------------------------------------------------------------
+
+class TestRouterGauges:
+    """The sharded router publishes per-shard occupancy at the existing
+    host sync points (admission / preemption / completion) plus a final
+    refresh in run().  The gauges must equal the host-side oracle — the
+    same public probes (`free_slot_count` / `free_block_count()`) the
+    placement policy itself reads."""
+
+    def test_shard_gauges_and_placement_counters(self, global_registry_enabled):
+        from repro.serve import ShardedEngine
+
+        reg = global_registry_enabled
+        cfg, params = _setup()
+        dev = jax.devices()[0]
+        eng = ShardedEngine(
+            cfg, PoolConfig(max_slots=2, max_new=8, max_prompt=16),
+            devices=[dev, dev],
+        )
+        base = jax.random.PRNGKey(5)
+        reqs = [
+            eng.submit(_prompt(i, n, cfg.vocab_size), 4,
+                       key=jax.random.fold_in(base, i))
+            for i, n in enumerate((5, 9, 12))
+        ]
+        eng.step(params)
+        # Mid-flight: occupancy gauges reflect the state after the last
+        # admission, which decode does not change until a completion.
+        snap = reg.snapshot()
+        assert eng.active == 3
+        for i, sh in enumerate(eng.shards):
+            assert snap["gauges"][f"serve.shard_free_slots.{i}"] == float(
+                sh.free_slot_count
+            )
+            assert snap["gauges"][f"serve.shard_free_blocks.{i}"] == float(
+                sh.free_block_count()
+            )
+        done = eng.run(params)
+        assert len(done) == len(reqs)
+        snap = reg.snapshot()
+        # Terminal refresh: pool fully idle again.
+        assert snap["gauges"]["router.queue_depth"] == 0.0
+        for i in range(eng.num_shards):
+            assert snap["gauges"][f"serve.shard_free_slots.{i}"] == float(
+                eng.pool.max_slots
+            )
+        # Placement counters == the router's own placement ledger, and
+        # every admission was counted exactly once (no preemptions here).
+        assert snap["counters"]["router.placements"] == float(len(reqs))
+        for i in range(eng.num_shards):
+            assert snap["counters"].get(
+                f"router.placements.shard{i}", 0.0
+            ) == float(eng.placement_counts[i])
+        assert snap["counters"]["serve.requests_submitted"] == float(len(reqs))
+        # run() published the shard-summed device counters as gauges,
+        # with the drop rate re-derived from the summed totals.
+        host = eng.device_counters()
+        for k, v in host.items():
+            assert snap["gauges"][f"serve.device.{k}"] == pytest.approx(v)
+        assert snap["gauges"]["serve.device.link_elems"] == pytest.approx(
+            sum(sh.device_counters()["link_elems"] for sh in eng.shards)
+        )
